@@ -1,0 +1,71 @@
+"""Paper §6 — the FliT transformation: correctness-vs-cost comparison.
+
+Per (workload × policy):
+* durability violation rate over a seed sweep with injected crashes
+  (raw / original-FliT violate; Alg. 2 / MStore-all never do);
+* modelled operation cost (Fig. 5 latency table) — Alg. 2's
+  LStore+one-RFlush beats MStore-everything, quantifying the paper's
+  §6.1 performance argument;
+* simulator throughput (ops/s) as a harness health metric.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core.flit import POLICIES
+from repro.core.harness import WORKLOADS, run_once
+from repro.core.latency import DEVICE, trace_cost
+
+N_SEEDS = 150
+
+
+def violation_rates():
+    out = []
+    for wl_name, mk in WORKLOADS.items():
+        for policy in POLICIES:
+            t0 = time.perf_counter()
+            viol = ops = 0
+            for seed in range(N_SEEDS):
+                r = run_once(mk, policy, seed, p_crash=0.08, max_crashes=2)
+                viol += (not r.durable)
+                ops += sum(1 for e in r.history if e.kind == "res")
+            dt = time.perf_counter() - t0
+            out.append((f"flit_violations_{wl_name}_{policy}",
+                        viol, f"{N_SEEDS} seeds; {ops/dt:.0f} ops/s checked"))
+    return out
+
+
+def op_cost_model():
+    """Modelled ns per high-level op (device issuing, remote object)."""
+    out = []
+    # counter inc: raw = 1 RMW; flit = cnt-RMW + RMW + RFlush + cnt-RMW;
+    # mstore_all = 1 M-RMW
+    raw = [(DEVICE, "faa", "remote")]
+    flit = [(DEVICE, "faa", "remote")] * 3 + [(DEVICE, "rflush", "remote")]
+    mstore = [(DEVICE, "faa", "remote")]
+    out.append(("flit_cost_inc_raw_ns", trace_cost(raw), "no durability"))
+    out.append(("flit_cost_inc_flit_cxl0_ns",
+                trace_cost(flit), "durable (Alg. 2)"))
+    out.append(("flit_cost_inc_mstore_ns",
+                trace_cost(mstore, flavors=["m"]),
+                "durable (MStore; no counters)"))
+    # 4-store op (e.g. stack push: 2 private field stores + CAS publish)
+    flit4 = ([(DEVICE, "lstore", "remote")] * 3
+             + [(DEVICE, "rflush", "remote")] * 3
+             + [(DEVICE, "cas", "remote"), (DEVICE, "rflush", "remote")])
+    mstore4 = [(DEVICE, "mstore", "remote")] * 3 + [(DEVICE, "cas", "remote")]
+    out.append(("flit_cost_push_flit_cxl0_ns", trace_cost(flit4),
+                "Alg. 2: LStore+RFlush per field"))
+    out.append(("flit_cost_push_mstore_ns",
+                trace_cost(mstore4, flavors=["l", "l", "l", "m"]),
+                "MStore fields + M-CAS"))
+    return out
+
+
+def main():
+    for name, val, derived in violation_rates() + op_cost_model():
+        print(f"{name},{val},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Paper Table 1 — CXL transactions observable per CXL0 primitive.
+
+Emits the encoded mapping and the availability summary (which primitives
+current hardware cannot issue — the paper's '???' rows), plus per-§4
+system-configuration primitive sets.
+"""
+from __future__ import annotations
+
+from repro.core.latency import (
+    CONFIG_PRIMITIVES, TABLE1, available_primitives,
+)
+
+
+def main():
+    for r in TABLE1:
+        print(f"table1_{r.node}_{r.primitive},"
+              f"{1 if r.available else 0},"
+              f"op={r.operation} | HM={'/'.join(r.to_hm)} | "
+              f"HDM={'/'.join(r.to_hdm)}")
+    for node in ("host", "device"):
+        av = available_primitives(node)
+        print(f"table1_available_{node},{len(av)},{'/'.join(av)}")
+    for config, nodes in CONFIG_PRIMITIVES.items():
+        for node, prims in nodes.items():
+            print(f"config_{config}_{node},{len(prims)},{'/'.join(prims)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Benchmark runner: one module per paper table/figure + system benches.
+
+Prints ``name,value,derived`` CSV rows (assignment format).  Roofline /
+dry-run reporting lives in launch/dryrun.py + roofline/report.py because it
+needs the 512-device environment.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (bench_latency, bench_table1, bench_flit,
+                            bench_checkpoint, bench_model_fuzz)
+    modules = [
+        ("fig5 latency model", bench_latency),
+        ("table1 transaction mapping", bench_table1),
+        ("flit transformation (violations + cost)", bench_flit),
+        ("durable checkpoint protocol", bench_checkpoint),
+        ("vectorized semantics fuzzing", bench_model_fuzz),
+    ]
+    for title, mod in modules:
+        print(f"# --- {title} ---", flush=True)
+        t0 = time.perf_counter()
+        mod.main()
+        print(f"# ({title}: {time.perf_counter()-t0:.1f}s)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

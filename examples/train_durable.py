@@ -1,0 +1,99 @@
+"""End-to-end driver: train a language model with durable FliT-protocol
+checkpointing and injected worker crashes.
+
+Defaults train a ~10M-param OLMo-style model for 60 steps on CPU in a few
+minutes; ``--full`` selects a ~100M-param config for a few hundred steps
+(the assignment's end-to-end scale — expect ~1-2 h on one CPU core; on a
+real TPU slice the same driver runs via launch/train.py).
+
+Two crashes are injected; the loop recovers from the pool (or a peer's
+staged copy with --replicate) and the final state is verified IDENTICAL to
+an uninterrupted run — the durable-linearizability guarantee, end to end.
+
+Run:  PYTHONPATH=src python examples/train_durable.py [--full] [--replicate]
+"""
+import argparse
+import shutil
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.pipeline import DataPipeline, SyntheticLMSource
+from repro.dsm.pool import DSMPool
+from repro.dsm.tiers import TierManager
+from repro.models.registry import build
+from repro.train.loop import run_durable_loop
+from repro.train.state import init_train_state
+from repro.train.step import make_train_step
+
+
+def small_cfg(full: bool):
+    base = get_config("olmo-1b")
+    if full:    # ~100M params
+        return base.with_(n_layers=8, d_model=768, n_heads=12, n_kv_heads=12,
+                          d_ff=3072, vocab_size=32000, attn_chunk=256,
+                          remat="none")
+    return base.with_(n_layers=4, d_model=256, n_heads=8, n_kv_heads=8,
+                      d_ff=1024, vocab_size=8192, attn_chunk=128,
+                      remat="none")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--replicate", action="store_true",
+                    help="RStore-stage state into a peer (faster recovery)")
+    ap.add_argument("--steps", type=int, default=None)
+    args = ap.parse_args()
+
+    cfg = small_cfg(args.full)
+    n_steps = args.steps or (300 if args.full else 60)
+    batch, seq = (8, 512) if args.full else (4, 256)
+
+    bundle = build(cfg)
+    print(f"model: {bundle.n_params()/1e6:.1f}M params, "
+          f"{cfg.n_layers}L d{cfg.d_model}")
+    key = jax.random.PRNGKey(0)
+    state = init_train_state(bundle.init_params(key), key)
+    step = jax.jit(make_train_step(bundle, peak_lr=3e-4,
+                                   total_steps=n_steps))
+    tmp = tempfile.mkdtemp(prefix="train_durable_")
+    try:
+        pool = DSMPool(f"{tmp}/pool")
+        peer = TierManager(DSMPool(f"{tmp}/peer"), worker_id=1)
+        crash_at = {n_steps // 3: "before_commit",
+                    2 * n_steps // 3: "after_commit"}
+        pipe = DataPipeline(SyntheticLMSource(cfg.vocab_size), batch, seq)
+        print(f"training {n_steps} steps, commit every 10, crashes at "
+              f"{sorted(crash_at)} …")
+        r = run_durable_loop(step, state, pipe, pool, n_steps=n_steps,
+                             commit_every=10, commit_mode="async",
+                             peer_tiers=peer if args.replicate else None,
+                             replicate=args.replicate, crash_at=crash_at)
+        print(f"crashes: {r.crashes}  recoveries: {r.recoveries}")
+        print(f"loss: first={r.losses[0]:.3f} last={r.losses[-1]:.3f}")
+        mean_compute = np.mean([t.compute_s for t in r.timings])
+        mean_commit = np.mean([t.commit_s for t in r.timings if t.commit_s])
+        print(f"step time: {mean_compute*1e3:.0f} ms;   "
+              f"commit (blocking part): {mean_commit*1e3:.0f} ms")
+
+        # verify against an uninterrupted run
+        pool2 = DSMPool(f"{tmp}/pool2")
+        pipe2 = DataPipeline(SyntheticLMSource(cfg.vocab_size), batch, seq)
+        r2 = run_durable_loop(step, state, pipe2, pool2, n_steps=n_steps,
+                              commit_every=10)
+        same = all(
+            np.array_equal(np.asarray(a, np.float32),
+                           np.asarray(b, np.float32))
+            for a, b in zip(jax.tree_util.tree_leaves(r.state.params),
+                            jax.tree_util.tree_leaves(r2.state.params)))
+        print(f"crash-recovered final params identical to clean run: {same}")
+        assert same
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Architecture registry: ``get_config("<arch-id>")`` / ``--arch <id>``."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import (  # noqa: F401
+    ModelConfig, MoEConfig, MLAConfig, MambaConfig, RWKVConfig, EncDecConfig,
+    ShapeConfig, SHAPES, SHAPES_BY_NAME, shape_applicable,
+)
+
+_ARCH_MODULES: Dict[str, str] = {
+    "chameleon-34b": "repro.configs.chameleon_34b",
+    "olmo-1b": "repro.configs.olmo_1b",
+    "yi-34b": "repro.configs.yi_34b",
+    "internlm2-1.8b": "repro.configs.internlm2_1_8b",
+    "phi3-medium-14b": "repro.configs.phi3_medium_14b",
+    "olmoe-1b-7b": "repro.configs.olmoe_1b_7b",
+    "deepseek-v2-236b": "repro.configs.deepseek_v2_236b",
+    "jamba-1.5-large-398b": "repro.configs.jamba_1_5_large_398b",
+    "whisper-small": "repro.configs.whisper_small",
+    "rwkv6-7b": "repro.configs.rwkv6_7b",
+}
+
+ARCH_IDS: List[str] = list(_ARCH_MODULES)
+
+# Published parameter totals (for sanity tests; +-4% tolerance).
+PUBLISHED_PARAMS = {
+    "chameleon-34b": 34.4e9,
+    "olmo-1b": 1.18e9,
+    "yi-34b": 34.4e9,
+    "internlm2-1.8b": 1.89e9,
+    # "14B" is the marketing name; the exact config (untied emb) is 14.66B
+    "phi3-medium-14b": 14.66e9,
+    "olmoe-1b-7b": 6.9e9,
+    "deepseek-v2-236b": 236e9,
+    "jamba-1.5-large-398b": 398e9,
+    "whisper-small": 0.244e9,
+    "rwkv6-7b": 7.6e9,
+}
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    return importlib.import_module(_ARCH_MODULES[arch_id]).CONFIG
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    return importlib.import_module(_ARCH_MODULES[arch_id]).SMOKE_CONFIG

@@ -1,0 +1,235 @@
+"""CXL0 as a composable JAX module: vectorized executable semantics.
+
+The Python LTS (``core.semantics``) is the reference; this module is its
+JAX twin for *scale*: states are arrays, one scheduler step is a pure
+``jax.lax``-branched function, whole schedules run under ``lax.scan`` and
+thousands of random schedules run in parallel under ``vmap`` (the fuzzing
+rig used by the property tests, and the engine behind
+``benchmarks/bench_model_fuzz.py``).
+
+Encoding
+--------
+* ``C``: (N, L) int32, value or ``BOT = -1``
+* ``M``: (L,) int32 (owner map is static)
+* actions: (5,) int32 ``[kind, machine, loc, val, flavor]`` with kinds from
+  ``ACT``.  Disabled/blocked actions are no-ops (deterministic *effective*
+  semantics: flushes drain eagerly — the same executable interpretation the
+  Python ``Simulator`` uses; the blocking LTS view lives in
+  ``core.semantics``).
+
+Loads write their observed value into the per-step output so schedules
+return full observation traces.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+BOT = -1
+
+ACT = dict(noop=0, lstore=1, rstore=2, mstore=3, load=4, lflush=5, rflush=6,
+           tau_cc=7, tau_cm=8, crash=9, faa=10)
+FLAVOR = dict(l=0, r=1, m=2)
+
+
+@dataclasses.dataclass(frozen=True)
+class JaxSystem:
+    """Static system description (owner map, volatility)."""
+    owner: Tuple[int, ...]
+    volatile: Tuple[bool, ...]
+    n_machines: int
+
+    @property
+    def n_locs(self) -> int:
+        return len(self.owner)
+
+    def owner_arr(self):
+        return jnp.asarray(self.owner, jnp.int32)
+
+    def volatile_arr(self):
+        return jnp.asarray(self.volatile, jnp.bool_)
+
+
+def initial_arrays(sys: JaxSystem):
+    C = jnp.full((sys.n_machines, sys.n_locs), BOT, jnp.int32)
+    M = jnp.zeros((sys.n_locs,), jnp.int32)
+    return C, M
+
+
+# ---------------------------------------------------------------------------
+# Primitive steps (pure functions on (C, M))
+# ---------------------------------------------------------------------------
+
+def _invalidate_others(C, keep_machine, x):
+    col = C[:, x]
+    keep = jnp.arange(C.shape[0]) == keep_machine
+    return C.at[:, x].set(jnp.where(keep, col, BOT))
+
+
+def _lstore(sys, C, M, i, x, v):
+    C = _invalidate_others(C, i, x)
+    return C.at[i, x].set(v), M
+
+
+def _rstore(sys, C, M, i, x, v):
+    k = sys.owner_arr()[x]
+    C = _invalidate_others(C, k, x)
+    return C.at[k, x].set(v), M
+
+
+def _mstore(sys, C, M, i, x, v):
+    C = _invalidate_others(C, -1, x)            # -1 matches no machine
+    return C, M.at[x].set(v)
+
+
+def _cached_value(C, x):
+    col = C[:, x]
+    any_valid = jnp.any(col != BOT)
+    val = jnp.max(jnp.where(col != BOT, col, jnp.iinfo(jnp.int32).min))
+    return any_valid, val
+
+
+def _load(sys, C, M, i, x):
+    any_valid, val = _cached_value(C, x)
+    out = jnp.where(any_valid, val, M[x])
+    # LOAD-from-C copies the value into C_i
+    C = jnp.where(any_valid, C.at[i, x].set(out), C)
+    return C, M, out
+
+
+def _drain_to_owner(sys, C, M, x):
+    """Move any cached value of x fully to the owner's memory (rflush)."""
+    any_valid, val = _cached_value(C, x)
+    C = _invalidate_others(C, -1, x)
+    M = jnp.where(any_valid, M.at[x].set(val), M)
+    return C, M
+
+
+def _lflush(sys, C, M, i, x):
+    """Eager LFlush: push C_i(x) one level (owner cache, or memory if owner)."""
+    k = sys.owner_arr()[x]
+    v = C[i, x]
+    has = v != BOT
+    is_owner = i == k
+    # non-owner: value moves to owner's cache
+    C_cc = C.at[i, x].set(BOT).at[k, x].set(v)
+    # owner: value moves to memory, all caches invalidated
+    C_cm = _invalidate_others(C, -1, x)
+    M_cm = M.at[x].set(v)
+    C2 = jnp.where(has, jnp.where(is_owner, C_cm, C_cc), C)
+    M2 = jnp.where(has & is_owner, M_cm, M)
+    return C2, M2
+
+
+def _rflush(sys, C, M, i, x):
+    return _drain_to_owner(sys, C, M, x)
+
+
+def _tau_cc(sys, C, M, i, x):
+    k = sys.owner_arr()[x]
+    v = C[i, x]
+    ok = (v != BOT) & (i != k)
+    C2 = C.at[i, x].set(BOT).at[k, x].set(v)
+    return jnp.where(ok, C2, C), M
+
+
+def _tau_cm(sys, C, M, i, x):
+    k = sys.owner_arr()[x]
+    v = C[k, x]
+    ok = v != BOT
+    C2 = _invalidate_others(C, -1, x)
+    M2 = M.at[x].set(v)
+    return jnp.where(ok, C2, C), jnp.where(ok, M2, M)
+
+
+def _crash(sys, C, M, i, x):
+    C = C.at[i, :].set(BOT)
+    owned = sys.owner_arr() == i
+    M = jnp.where(owned & sys.volatile_arr()[i], jnp.zeros_like(M), M)
+    return C, M
+
+
+def _faa(sys, C, M, i, x, d, flavor):
+    """FAA: atomic load + flavored store. Returns (C, M, old)."""
+    _, _, old = _load(sys, C, M, i, x)       # (no cache copy for RMW load)
+    new = old + d
+    Cl, Ml = _lstore(sys, C, M, i, x, new)
+    Cr, Mr = _rstore(sys, C, M, i, x, new)
+    Cm, Mm = _mstore(sys, C, M, i, x, new)
+    C2 = jnp.where(flavor == 0, Cl, jnp.where(flavor == 1, Cr, Cm))
+    M2 = jnp.where(flavor == 0, Ml, jnp.where(flavor == 1, Mr, Mm))
+    return C2, M2, old
+
+
+# ---------------------------------------------------------------------------
+# One scheduler step + schedule runner
+# ---------------------------------------------------------------------------
+
+def step(sys: JaxSystem, C, M, action):
+    """action: (5,) int32 [kind, machine, loc, val, flavor] -> (C, M, obs)."""
+    kind, i, x, v, fl = (action[0], action[1], action[2], action[3],
+                         action[4])
+    obs0 = jnp.int32(BOT)
+
+    # branches as index-switched pure functions
+    def b_noop(_):   return C, M, obs0
+    def b_lstore(_): C2, M2 = _lstore(sys, C, M, i, x, v); return C2, M2, obs0
+    def b_rstore(_): C2, M2 = _rstore(sys, C, M, i, x, v); return C2, M2, obs0
+    def b_mstore(_): C2, M2 = _mstore(sys, C, M, i, x, v); return C2, M2, obs0
+    def b_load(_):   C2, M2, o = _load(sys, C, M, i, x); return C2, M2, o
+    def b_lflush(_): C2, M2 = _lflush(sys, C, M, i, x); return C2, M2, obs0
+    def b_rflush(_): C2, M2 = _rflush(sys, C, M, i, x); return C2, M2, obs0
+    def b_taucc(_):  C2, M2 = _tau_cc(sys, C, M, i, x); return C2, M2, obs0
+    def b_taucm(_):  C2, M2 = _tau_cm(sys, C, M, i, x); return C2, M2, obs0
+    def b_crash(_):  C2, M2 = _crash(sys, C, M, i, x); return C2, M2, obs0
+    def b_faa(_):    C2, M2, o = _faa(sys, C, M, i, x, v, fl); return C2, M2, o
+
+    return jax.lax.switch(
+        jnp.clip(kind, 0, 10), [b_noop, b_lstore, b_rstore, b_mstore, b_load,
+                                b_lflush, b_rflush, b_taucc, b_taucm,
+                                b_crash, b_faa], None)
+
+
+@partial(jax.jit, static_argnums=0)
+def run_schedule(sys: JaxSystem, actions):
+    """actions: (T, 5) int32. Returns final (C, M) and per-step observations."""
+    C, M = initial_arrays(sys)
+
+    def body(carry, a):
+        C, M = carry
+        C, M, obs = step(sys, C, M, a)
+        return (C, M), obs
+
+    (C, M), obs = jax.lax.scan(body, (C, M), actions)
+    return C, M, obs
+
+
+@partial(jax.jit, static_argnums=0)
+def run_schedules(sys: JaxSystem, batched_actions):
+    """(B, T, 5) → vmapped runs: final Cs, Ms, observations (B, T)."""
+    return jax.vmap(lambda a: run_schedule(sys, a))(batched_actions)
+
+
+def random_schedules(sys: JaxSystem, key, batch: int, length: int,
+                     max_val: int = 4, p_crash: float = 0.02):
+    """Random action tensors for fuzzing (kind-weighted)."""
+    ks = jax.random.split(key, 5)
+    kinds = jax.random.choice(
+        ks[0], jnp.asarray([ACT["lstore"], ACT["rstore"], ACT["mstore"],
+                            ACT["load"], ACT["lflush"], ACT["rflush"],
+                            ACT["tau_cc"], ACT["tau_cm"], ACT["faa"]],
+                           jnp.int32),
+        (batch, length),
+        p=jnp.asarray([.2, .1, .1, .25, .05, .05, .1, .05, .1]))
+    crash_mask = jax.random.bernoulli(ks[1], p_crash, (batch, length))
+    kinds = jnp.where(crash_mask, ACT["crash"], kinds)
+    machines = jax.random.randint(ks[2], (batch, length), 0, sys.n_machines)
+    locs = jax.random.randint(ks[3], (batch, length), 0, sys.n_locs)
+    vals = jax.random.randint(ks[4], (batch, length), 0, max_val)
+    flavors = jnp.zeros((batch, length), jnp.int32)
+    return jnp.stack([kinds, machines, locs, vals, flavors],
+                     axis=-1).astype(jnp.int32)

@@ -1,0 +1,20 @@
+"""Disaggregated-memory runtime: the paper's CXL0 tier semantics + FliT
+commit protocol applied to distributed training state.
+
+Mapping (DESIGN.md §2):
+    machine i            -> training worker
+    local cache C_i      -> device HBM state (volatile)
+    owner cache C_k      -> host-DRAM staging buffer (volatile, survives
+                            peer crashes but not its own host's)
+    owner memory M_k     -> the persistent pool (checkpoint store)
+    LStore               -> in-HBM update (every step)
+    RStore               -> async stage into a peer host's buffer
+    MStore / RFlush      -> durable commit into the pool (fsync + CRC)
+    completeOp           -> atomic manifest rename
+    FliT counter         -> per-object dirty counter consulted by joiners
+    crash f_i            -> worker preemption; peers uninterrupted
+"""
+from repro.dsm.pool import DSMPool, PoolObject  # noqa: F401
+from repro.dsm.tiers import TierManager  # noqa: F401
+from repro.dsm.flit_runtime import DurableCommitter  # noqa: F401
+from repro.dsm.recovery import RecoveryManager, CrashError  # noqa: F401

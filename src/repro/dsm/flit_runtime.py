@@ -1,0 +1,126 @@
+"""The FliT-protocol durable commit for training state (paper Alg. 2 at
+checkpoint granularity).
+
+One *commit* of step ``s`` = the high-level operation; the state objects
+(param shards, optimizer moments, data-pipeline state, RNG) are the shared
+locations.  Following Alg. 2:
+
+    for each object X:  flit_counter(X)++ ; LStore(X) ; RFlush(X) ;
+                        flit_counter(X)--
+    completeOp()  =  atomic manifest rename
+
+Durable linearizability of the step history follows exactly as in the
+paper's §B: a commit whose completeOp (manifest rename) finished survives
+any single-worker crash; recovery always lands on SOME completed commit —
+never a torn mixture of steps (test: tests/test_dsm.py).
+
+Two schedules:
+* ``sync``  — rflush every object, then completeOp (simple, blocking);
+* ``async`` — overlap: flushes of step s run in the background while step
+  s+1 computes; the next commit joins them first.  This is the
+  compute/flush overlap lever measured in benchmarks/bench_checkpoint.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, Optional
+
+from repro.dsm.pool import DSMPool, PoolObject
+from repro.dsm.tiers import TierManager
+
+
+@dataclasses.dataclass
+class CommitStats:
+    step: int
+    seq: int
+    n_objects: int
+    bytes_written: int
+    wall_s: float
+    mode: str
+
+
+class DurableCommitter:
+    def __init__(self, tiers: TierManager, *, mode: str = "sync",
+                 replicate_to: Optional[TierManager] = None):
+        assert mode in ("sync", "async")
+        self.tiers = tiers
+        self.mode = mode
+        self.replicate_to = replicate_to     # peer for RStore staging
+        self._pending: Optional[Dict[str, Any]] = None
+        self.stats: list = []
+
+    # -- the Alg. 2 protocol over training state -----------------------------
+    def update(self, objects: Dict[str, Any], step: Optional[int] = None):
+        """Per-step LStore of the new state into HBM (always happens).
+        If a peer is configured, also RStore-stage (cheap replication),
+        tagged with the training step for recovery comparability."""
+        for name, tree in objects.items():
+            self.tiers.lstore(name, tree)
+            if self.replicate_to is not None:
+                self.tiers.rstore(name, self.replicate_to, tag=step)
+
+    def commit(self, step: int, meta: Optional[dict] = None) -> CommitStats:
+        """Durable commit of the current HBM state (blocking)."""
+        t0 = time.perf_counter()
+        if self.mode == "async":
+            return self._commit_async(step, meta, t0)
+        written: Dict[str, PoolObject] = {}
+        for name in self.tiers.hbm:
+            written[name] = self.tiers.rflush(name)
+        seq = self.tiers.pool.commit_manifest(step, written, meta)
+        st = CommitStats(step, seq, len(written),
+                         sum(o.nbytes for o in written.values()),
+                         time.perf_counter() - t0, "sync")
+        self.stats.append(st)
+        return st
+
+    def _commit_async(self, step: int, meta, t0) -> CommitStats:
+        """Join the previous async flushes, completeOp them, then launch
+        flushes of the CURRENT state in the background."""
+        st = None
+        if self._pending is not None:
+            prev_step, names = self._pending
+            written = {n: self.tiers.flush_wait(n) for n in names}
+            seq = self.tiers.pool.commit_manifest(prev_step, written, meta)
+            st = CommitStats(prev_step, seq, len(written),
+                             sum(o.nbytes for o in written.values()),
+                             time.perf_counter() - t0, "async")
+            self.stats.append(st)
+        names = list(self.tiers.hbm)
+        for name in names:
+            self.tiers.flush_async(name)
+        self._pending = (step, names)
+        return st
+
+    def drain(self, meta: Optional[dict] = None) -> Optional[CommitStats]:
+        """Flush any pending async commit (planned shutdown — the paper's
+        sanctioned GPF use case)."""
+        if self.mode == "async" and self._pending is not None:
+            t0 = time.perf_counter()
+            prev_step, names = self._pending
+            written = {n: self.tiers.flush_wait(n) for n in names}
+            seq = self.tiers.pool.commit_manifest(prev_step, written, meta)
+            self._pending = None
+            st = CommitStats(prev_step, seq, len(written),
+                             sum(o.nbytes for o in written.values()),
+                             time.perf_counter() - t0, "drain")
+            self.stats.append(st)
+            return st
+        return None
+
+
+def gpf_snapshot(committers, step: int, meta: Optional[dict] = None):
+    """Global Persistent Flush (paper §3.2): drain EVERY worker's volatile
+    tiers into the pool and commit a synchronized manifest.
+
+    The paper deems GPF too blocking/fragile for the hot path but sanctions
+    it for planned shutdown/snapshot; that is exactly this API's contract —
+    the launcher calls it on SIGTERM or before elastic re-meshing.  Returns
+    the per-worker commit stats."""
+    stats = []
+    for c in committers:
+        c.drain(meta)
+        stats.append(c.commit(step, meta))
+        c.drain(meta)
+    return stats

@@ -1,0 +1,205 @@
+"""Persistent object pool — the ``M_k`` tier (owner memory) of the runtime.
+
+On-disk layout (one directory per pool, usually on shared storage):
+
+    pool/
+      objects/<object>/<version>.npz     # flattened pytree + CRC32 sidecar
+      objects/<object>/<version>.crc
+      manifest.json                      # CURRENT committed versions
+      manifest.<n>.json                  # history (GC-bounded)
+
+Write protocol (the MStore/RFlush realization):
+  1. write ``<version>.npz`` to a temp name, fsync;
+  2. write the CRC sidecar, fsync;
+  3. atomically rename both into place.
+A *commit* (``completeOp``) atomically renames a new ``manifest.json``
+listing every object's version + CRC.  Readers validate CRCs; a torn or
+bit-flipped shard fails validation and recovery falls back to the previous
+manifest — the recovered state is always SOME completed commit (never torn),
+which is exactly durable linearizability of the step history.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+import zipfile
+import zlib
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+
+
+@dataclasses.dataclass
+class PoolObject:
+    name: str
+    version: int
+    crc: int
+    nbytes: int
+
+
+def _flatten(tree) -> Tuple[List[np.ndarray], Any]:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return [np.asarray(l) for l in leaves], treedef
+
+
+def _crc_of_arrays(arrays: List[np.ndarray]) -> int:
+    crc = 0
+    for a in arrays:
+        crc = zlib.crc32(np.ascontiguousarray(a).tobytes(), crc)
+    return crc
+
+
+class CorruptObjectError(Exception):
+    pass
+
+
+#: dtypes numpy's npz round-trips natively; everything else (bfloat16,
+#: float8 variants, ...) is stored as a raw byte view + sidecar dtype
+_NATIVE_DTYPES = {
+    "bool", "int8", "int16", "int32", "int64", "uint8", "uint16", "uint32",
+    "uint64", "float16", "float32", "float64", "complex64", "complex128",
+}
+
+
+class DSMPool:
+    def __init__(self, path: str):
+        self.path = path
+        self.obj_dir = os.path.join(path, "objects")
+        os.makedirs(self.obj_dir, exist_ok=True)
+        self._manifest_seq = self._latest_manifest_seq()
+
+    # -- low-level object IO -------------------------------------------------
+    def _obj_path(self, name: str, version: int) -> str:
+        d = os.path.join(self.obj_dir, name)
+        os.makedirs(d, exist_ok=True)
+        return os.path.join(d, f"{version:08d}")
+
+    def write_object(self, name: str, version: int, tree) -> PoolObject:
+        """Durable write of one object version (MStore semantics: complete
+        only once on physical storage)."""
+        arrays, treedef = _flatten(tree)
+        crc = _crc_of_arrays(arrays)
+        base = self._obj_path(name, version)
+        tmp_fd, tmp_name = tempfile.mkstemp(dir=os.path.dirname(base))
+        os.close(tmp_fd)
+        # npz cannot round-trip ml_dtypes (bfloat16 etc.): store a raw view
+        # and record the true dtype in the sidecar
+        dtypes = [str(a.dtype) for a in arrays]
+        raw = [np.ascontiguousarray(a).view(np.uint8)
+               if d not in _NATIVE_DTYPES else a
+               for a, d in zip(arrays, dtypes)]
+        shapes = [list(a.shape) for a in arrays]
+        with open(tmp_name, "wb") as f:
+            np.savez(f, **{f"a{i}": a for i, a in enumerate(raw)})
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp_name, base + ".npz")
+        meta = {"crc": crc, "treedef": str(treedef),
+                "n": len(arrays), "dtypes": dtypes, "shapes": shapes}
+        with open(base + ".crc.tmp", "w") as f:
+            json.dump(meta, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(base + ".crc.tmp", base + ".crc")
+        nbytes = sum(a.nbytes for a in arrays)
+        return PoolObject(name, version, crc, nbytes)
+
+    def read_object(self, name: str, version: int, treedef_like) -> Any:
+        """Read + CRC-validate one object version; raises CorruptObjectError
+        on mismatch (recovery then falls back to an older manifest)."""
+        base = self._obj_path(name, version)
+        try:
+            with open(base + ".crc") as f:
+                meta = json.load(f)
+            with np.load(base + ".npz") as z:
+                arrays = [z[f"a{i}"] for i in range(meta["n"])]
+            if "dtypes" in meta:
+                import ml_dtypes  # noqa: F401  (registers bfloat16 et al.)
+                arrays = [
+                    a if d in _NATIVE_DTYPES
+                    else a.view(np.dtype(d)).reshape(shape)
+                    for a, d, shape in zip(arrays, meta["dtypes"],
+                                           meta["shapes"])]
+        except (OSError, KeyError, ValueError, TypeError, EOFError,
+                zipfile.BadZipFile, zlib.error) as e:
+            raise CorruptObjectError(f"{name}@{version}: {e}") from e
+        if _crc_of_arrays(arrays) != meta["crc"]:
+            raise CorruptObjectError(f"{name}@{version}: CRC mismatch")
+        _, treedef = jax.tree_util.tree_flatten(treedef_like)
+        return jax.tree_util.tree_unflatten(treedef, arrays)
+
+    # -- manifests (completeOp) ----------------------------------------------
+    def _latest_manifest_seq(self) -> int:
+        best = -1
+        for fn in os.listdir(self.path):
+            if fn.startswith("manifest.") and fn.endswith(".json"):
+                mid = fn[len("manifest."):-len(".json")]
+                if mid.isdigit():
+                    best = max(best, int(mid))
+        return best
+
+    def commit_manifest(self, step: int, objects: Dict[str, PoolObject],
+                        meta: Optional[dict] = None) -> int:
+        """Atomic commit: the step is durable iff this rename completed."""
+        self._manifest_seq += 1
+        doc = {
+            "seq": self._manifest_seq,
+            "step": step,
+            "objects": {name: dataclasses.asdict(o)
+                        for name, o in objects.items()},
+            "meta": meta or {},
+        }
+        tmp = os.path.join(self.path, f".manifest.tmp.{self._manifest_seq}")
+        with open(tmp, "w") as f:
+            json.dump(doc, f)
+            f.flush()
+            os.fsync(f.fileno())
+        dst = os.path.join(self.path, f"manifest.{self._manifest_seq}.json")
+        os.replace(tmp, dst)
+        # update the convenience head pointer last (also atomic)
+        head = os.path.join(self.path, "manifest.json")
+        tmp2 = os.path.join(self.path, ".manifest.head.tmp")
+        with open(tmp2, "w") as f:
+            json.dump(doc, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp2, head)
+        return self._manifest_seq
+
+    def manifests_desc(self) -> List[dict]:
+        """All manifests, newest first."""
+        out = []
+        for fn in os.listdir(self.path):
+            if fn.startswith("manifest.") and fn.endswith(".json"):
+                mid = fn[len("manifest."):-len(".json")]
+                if not mid.isdigit():
+                    continue
+                try:
+                    with open(os.path.join(self.path, fn)) as f:
+                        out.append(json.load(f))
+                except (OSError, ValueError):
+                    continue
+        return sorted(out, key=lambda d: -d["seq"])
+
+    def latest_manifest(self) -> Optional[dict]:
+        ms = self.manifests_desc()
+        return ms[0] if ms else None
+
+    def gc(self, keep: int = 3):
+        """Drop all but the newest ``keep`` manifests + unreferenced versions."""
+        ms = self.manifests_desc()
+        keep_ms, drop_ms = ms[:keep], ms[keep:]
+        live = {(n, o["version"]) for m in keep_ms
+                for n, o in m["objects"].items()}
+        for m in drop_ms:
+            os.unlink(os.path.join(self.path, f"manifest.{m['seq']}.json"))
+        for name in os.listdir(self.obj_dir):
+            d = os.path.join(self.obj_dir, name)
+            for fn in os.listdir(d):
+                ver = int(fn.split(".")[0])
+                if (name, ver) not in live:
+                    os.unlink(os.path.join(d, fn))

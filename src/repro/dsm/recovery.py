@@ -1,0 +1,74 @@
+"""Crash injection + recovery (partial-crash model, per the paper §3.1).
+
+A worker crash loses its HBM and host-staging tiers; the pool and OTHER
+workers are uninterrupted.  Recovery sources, best first:
+
+1. **peer staging** — if a surviving peer holds an RStore-staged copy NEWER
+   than the pool's manifest (CXL0 cache-to-cache propagation), adopt it;
+2. **pool manifest** — newest manifest whose every object CRC-validates;
+   torn/corrupt shards trigger fallback to the previous manifest.
+
+``RecoveryManager.recover`` returns (state_objects, step, source).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+from repro.dsm.pool import CorruptObjectError, DSMPool
+from repro.dsm.tiers import TierManager
+
+
+class CrashError(Exception):
+    """Raised by fault-injection hooks to simulate a worker loss."""
+
+
+class RecoveryManager:
+    def __init__(self, pool: DSMPool):
+        self.pool = pool
+
+    def recover_from_pool(self, templates: Dict[str, Any]
+                          ) -> Optional[Tuple[Dict[str, Any], int, int]]:
+        """Newest fully-valid manifest -> (objects, step, seq)."""
+        for m in self.pool.manifests_desc():
+            try:
+                objs = {
+                    name: self.pool.read_object(name, o["version"],
+                                                templates[name])
+                    for name, o in m["objects"].items()}
+            except (CorruptObjectError, KeyError):
+                continue            # torn commit: fall back to older manifest
+            if set(objs) == set(templates):
+                return objs, m["step"], m["seq"]
+        return None
+
+    def recover(self, templates: Dict[str, Any],
+                peers: Tuple[TierManager, ...] = (),
+                ) -> Tuple[Dict[str, Any], int, str]:
+        """Full recovery path: peer staging beats the pool if newer.
+
+        ``templates``: pytree prototypes (for unflattening) per object.
+        Peer staging is only adopted if it covers ALL objects at one
+        consistent version (else it could mix steps — not linearizable).
+        """
+        pool_state = self.recover_from_pool(templates)
+        best_peer: Optional[Dict[str, Any]] = None
+        best_ver = -1
+        for peer in peers:
+            if set(peer.staging) != set(templates):
+                continue
+            vers = {v for v, _ in peer.staging.values()}
+            if len(vers) != 1:      # mixed-step staging: not consistent
+                continue
+            v = vers.pop()
+            if v > best_ver:
+                best_ver = v
+                best_peer = {n: t for n, (_, t) in peer.staging.items()}
+        if pool_state is None and best_peer is None:
+            raise RuntimeError("no recoverable state (cold start)")
+        if best_peer is not None:
+            # staged copies are tagged with the training step (see
+            # DurableCommitter.update); newest wins against the manifest
+            if pool_state is None or best_ver > pool_state[1]:
+                return best_peer, best_ver, "peer-staging"
+        objs, step, _ = pool_state
+        return objs, step, "pool"

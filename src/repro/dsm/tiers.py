@@ -1,0 +1,111 @@
+"""Tier manager: HBM / host-staging / pool with CXL0 primitive semantics.
+
+Per worker, per object:
+
+* ``lstore(name, tree)``   — update the HBM tier (in-memory reference;
+                             O(1), no copy — the training step already
+                             produced the new arrays).  Marks dirty.
+* ``rstore(name, peer)``   — stage a copy into a PEER worker's host buffer
+                             (CXL0: store completing in the owner's cache).
+                             Survives OUR crash; lost if the PEER crashes.
+* ``rflush(name)``         — durable write of the current HBM value into the
+                             pool.  Completes only when on storage (fsync).
+* ``mstore(name, tree)``   — lstore + rflush fused (Prop. 1.8).
+
+A background ``flush_async`` thread overlaps rflush I/O with compute; the
+commit barrier (``DurableCommitter``) joins it before completeOp.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.dsm.pool import DSMPool, PoolObject
+
+
+def _to_host(tree):
+    """Device→host copy (the actual D2H of the staging tier)."""
+    return jax.tree_util.tree_map(lambda a: np.asarray(a), tree)
+
+
+class TierManager:
+    def __init__(self, pool: DSMPool, worker_id: int):
+        self.pool = pool
+        self.worker_id = worker_id
+        self.hbm: Dict[str, Any] = {}               # C_i — device tier
+        self.staging: Dict[str, Tuple[int, Any]] = {}   # peer-staged copies:
+        #   name -> (version, host tree) staged INTO this worker by peers
+        self.versions: Dict[str, int] = {}
+        self.flit_counter: Dict[str, int] = {}
+        self._flush_threads: Dict[str, threading.Thread] = {}
+        self._flush_results: Dict[str, PoolObject] = {}
+        self._lock = threading.Lock()
+
+    # -- CXL0 primitive realizations ----------------------------------------
+    def lstore(self, name: str, tree: Any):
+        """Update the volatile HBM tier. Completes immediately."""
+        self.hbm[name] = tree
+        self.versions[name] = self.versions.get(name, 0) + 1
+
+    def rstore(self, name: str, peer: "TierManager",
+               tag: Optional[int] = None):
+        """Stage our current value into a peer's host buffer.  On our crash
+        the peer still holds it (newer than the pool) — CXL0's
+        cache-to-cache propagation made useful (peer-cache recovery).
+        ``tag`` (training step) makes staged copies comparable with pool
+        manifests during recovery."""
+        peer.staging[name] = (self.versions.get(name, 0) if tag is None
+                              else tag, _to_host(self.hbm[name]))
+
+    def rflush(self, name: str) -> PoolObject:
+        """Durable write; returns once the object is on storage."""
+        self.flit_counter[name] = self.flit_counter.get(name, 0) + 1
+        try:
+            obj = self.pool.write_object(name, self.versions.get(name, 0),
+                                         _to_host(self.hbm[name]))
+        finally:
+            self.flit_counter[name] -= 1
+        return obj
+
+    def mstore(self, name: str, tree: Any) -> PoolObject:
+        self.lstore(name, tree)
+        return self.rflush(name)
+
+    # -- async flush (compute/IO overlap) ------------------------------------
+    def flush_async(self, name: str):
+        """Start a durable write in the background; join via flush_wait.
+        The FliT counter stays raised until the write completes, so any
+        concurrent joiner knows the pool copy may be stale."""
+        self.flit_counter[name] = self.flit_counter.get(name, 0) + 1
+        version = self.versions.get(name, 0)
+        host_copy = _to_host(self.hbm[name])       # snapshot NOW
+
+        def work():
+            obj = self.pool.write_object(name, version, host_copy)
+            with self._lock:
+                self._flush_results[name] = obj
+                self.flit_counter[name] -= 1
+
+        t = threading.Thread(target=work, daemon=True)
+        self._flush_threads[name] = t
+        t.start()
+
+    def flush_wait(self, name: str) -> PoolObject:
+        t = self._flush_threads.pop(name, None)
+        if t is not None:
+            t.join()
+        with self._lock:
+            return self._flush_results.pop(name)
+
+    # -- crash ----------------------------------------------------------------
+    def crash(self):
+        """f_i: all volatile tiers of this worker vanish."""
+        self.hbm.clear()
+        self.staging.clear()
+        self.versions.clear()
+        self.flit_counter.clear()
+        self._flush_threads.clear()
+        self._flush_results.clear()

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for flash attention (dense softmax, fp32)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  scale: Optional[float] = None):
+    """q: (B, H, Sq, hd); k/v: (B, K, Sk, hd[/v]) with K | H. fp32 math."""
+    B, H, Sq, hd = q.shape
+    _, K, Sk, _ = k.shape
+    group = H // K
+    qf = q.astype(jnp.float32) * (hd ** -0.5 if scale is None else scale)
+    kf = jnp.repeat(k.astype(jnp.float32), group, axis=1)
+    vf = jnp.repeat(v.astype(jnp.float32), group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", qf, kf)
+    if causal:
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Sk)[None, :]
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-20)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vf).astype(q.dtype)

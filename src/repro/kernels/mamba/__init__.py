@@ -1,0 +1,1 @@
+from repro.kernels.mamba.ops import selective_scan  # noqa: F401

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the Mamba (S6) selective scan (naive recurrence).
+
+    h_t = dA_t ⊙ h_{t-1} + dBu_t          h ∈ R^{I×N}
+    y_t = Σ_n h_t[:, n] · C_t[n]
+
+Shapes: dA/dBu (B, S, I, N) fp32; C (B, S, N) fp32; h0 (B, I, N) fp32.
+Returns y (B, S, I) fp32 and final h.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(dA, dBu, C, h0=None):
+    B, S, I, N = dA.shape
+    h = (jnp.zeros((B, I, N), jnp.float32) if h0 is None
+         else h0.astype(jnp.float32))
+
+    def step(h, inputs):
+        dA_t, dBu_t, C_t = inputs
+        h = dA_t * h + dBu_t
+        y_t = jnp.einsum("bin,bn->bi", h, C_t)
+        return h, y_t
+
+    xs = (jnp.moveaxis(dA.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(dBu.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(C.astype(jnp.float32), 1, 0))
+    h, ys = jax.lax.scan(step, h, xs)
+    return jnp.moveaxis(ys, 0, 1), h

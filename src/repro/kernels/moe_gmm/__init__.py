@@ -1,0 +1,1 @@
+from repro.kernels.moe_gmm.ops import grouped_matmul  # noqa: F401

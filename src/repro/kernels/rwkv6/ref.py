@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the RWKV-6 WKV recurrence (naive step-by-step).
+
+Per head, head_dim n, state S ∈ R^{n×n} (key-major):
+
+    y_t = (S_{t-1} + diag(u * k_t) v_t^T)^T r_t      (read out)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T              (decay + rank-1 update)
+
+All math fp32.  Shapes: r/k/v/logw (B, T, H, n); u (H, n); S0 (B, H, n, n).
+Returns y (B, T, H, n) fp32 and the final state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, logw, u, S0=None):
+    B, T, H, n = r.shape
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    wf = jnp.exp(logw.astype(jnp.float32))            # decay in (0, 1)
+    uf = u.astype(jnp.float32)
+    S = (jnp.zeros((B, H, n, n), jnp.float32) if S0 is None
+         else S0.astype(jnp.float32))
+
+    def step(S, inputs):
+        r_t, k_t, v_t, w_t = inputs                   # (B, H, n) each
+        # bonus: current token contributes diag(u*k) v^T without decay
+        S_plus = S + (uf[None] * k_t)[..., :, None] * v_t[..., None, :]
+        y_t = jnp.einsum("bhij,bhi->bhj", S_plus, r_t)
+        S = w_t[..., :, None] * S + k_t[..., :, None] * v_t[..., None, :]
+        return S, y_t
+
+    xs = (jnp.moveaxis(rf, 1, 0), jnp.moveaxis(kf, 1, 0),
+          jnp.moveaxis(vf, 1, 0), jnp.moveaxis(wf, 1, 0))
+    S, ys = jax.lax.scan(step, S, xs)
+    return jnp.moveaxis(ys, 0, 1), S

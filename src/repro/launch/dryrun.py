@@ -1,0 +1,325 @@
+"""Multi-pod dry-run (assignment §MULTI-POD DRY-RUN).
+
+NOTE: the first two executable lines set XLA_FLAGS *before any jax import*
+— jax locks the device count on first backend init.  512 placeholder host
+devices back both production meshes (16x16 single-pod, 2x16x16 multi-pod).
+
+For every (architecture × input shape) cell and both production meshes:
+``jax.jit(step).lower(...).compile()`` with the full sharding config, then
+record ``memory_analysis()`` / ``cost_analysis()`` and the parsed
+collective schedule.  Additionally two *unrolled cost probes* (1 and 2
+layer-periods at full global shape, no while loops) provide the per-period
+FLOPs/bytes/collective-bytes that §Roofline extrapolates to full depth.
+
+Usage:
+    python -m repro.launch.dryrun --arch olmo-1b --shape train_4k \
+        --mesh single --out results/
+    python -m repro.launch.dryrun --all --mesh both --out results/
+"""
+from __future__ import annotations
+
+import os
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax-importing import (see module docstring)
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES_BY_NAME, get_config
+from repro.configs.base import ModelConfig, ShapeConfig, shape_applicable
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.models.registry import build, input_specs
+from repro.parallel.sharding import ctx_for_mesh, param_specs
+from repro.roofline.analysis import model_flops_for, roofline_terms
+from repro.roofline.hlo import collective_bytes_of_hlo
+from repro.train.state import abstract_train_state
+from repro.train.step import make_train_step
+
+
+# ---------------------------------------------------------------------------
+# sharding trees
+# ---------------------------------------------------------------------------
+
+def _shard(mesh, spec):
+    return NamedSharding(mesh, spec)
+
+
+def _tree_shardings(mesh, ctx, descs):
+    specs = param_specs(ctx, descs)
+    return jax.tree_util.tree_map(lambda s: _shard(mesh, s), specs)
+
+
+def _batch_shardings(mesh, ctx, specs: Dict[str, Any]):
+    dp = ctx.dp_axes if len(ctx.dp_axes) > 1 else ctx.dp_axes[0]
+    out = {}
+    for k, v in specs.items():
+        gb = v.shape[0]
+        p0 = dp if gb % ctx.dp_size == 0 else None
+        out[k] = _shard(mesh, P(p0, *([None] * (len(v.shape) - 1))))
+    return out
+
+
+def _state_shardings(mesh, ctx, bundle, moment_dtype):
+    p_sh = _tree_shardings(mesh, ctx, bundle.descs)
+    rep = _shard(mesh, P())
+    from repro.train.state import TrainState
+    from repro.optim.adamw import AdamWState
+    return TrainState(
+        params=p_sh,
+        opt=AdamWState(step=rep, mu=p_sh, nu=p_sh),
+        rng=rep)
+
+
+def _cache_shardings(mesh, ctx, bundle, batch, t_max):
+    return _tree_shardings(mesh, ctx, bundle.cache_descs(batch, t_max))
+
+
+# ---------------------------------------------------------------------------
+# lower + compile one cell
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CellResult:
+    arch: str
+    shape: str
+    mesh: str
+    kind: str
+    ok: bool
+    error: Optional[str] = None
+    compile_s: float = 0.0
+    # full (scanned) artifact
+    bytes_per_device: Optional[int] = None
+    argument_bytes: Optional[int] = None
+    output_bytes: Optional[int] = None
+    flops_cost: Optional[float] = None          # cost_analysis of full module
+    # probes (per chip)
+    probe1: Optional[Dict[str, float]] = None
+    probe2: Optional[Dict[str, float]] = None
+    n_periods: int = 1
+    collective_kinds: Optional[Dict[str, int]] = None
+    unresolved_trip: bool = False
+
+
+def probe_cfg(cfg: ModelConfig, k_periods: int) -> ModelConfig:
+    """cfg with prefix + k periods of layers (for the unrolled probes).
+
+    enc-dec: one "period" = one decoder layer + proportionally many
+    encoder layers (whisper: 1:1)."""
+    if cfg.is_encdec:
+        import dataclasses as _dc
+        enc_per = cfg.encdec.n_enc_layers // cfg.n_layers
+        return cfg.with_(
+            n_layers=k_periods,
+            encdec=_dc.replace(cfg.encdec,
+                               n_enc_layers=max(enc_per * k_periods, 1)))
+    groups = lm.layer_groups(cfg)
+    prefix = sum(g.n_repeats * len(g.kinds) for g in groups[:-1])
+    period = len(groups[-1].kinds)
+    return cfg.with_(n_layers=prefix + k_periods * period)
+
+
+def n_periods_of(cfg: ModelConfig) -> int:
+    if cfg.is_encdec:
+        return cfg.n_layers
+    return lm.layer_groups(cfg)[-1].n_repeats
+
+
+def _make_step(bundle, cfg, shape, ctx, *, unroll_layers=False,
+               microbatch=1):
+    """(fn, example args tree builder) for the cell's step kind."""
+    if shape.kind == "train":
+        def fn(state, batch):
+            step = make_train_step(bundle, ctx, microbatch=microbatch)
+            return step(state, batch)
+        if unroll_layers:
+            def fn(state, batch):  # noqa: F811
+                def loss_of(params, b):
+                    # probes unroll the KV/SSM chunk scans too -> while-free
+                    return bundle.loss(params, b, ctx=ctx, with_remat=True,
+                                       unroll_layers=True, unroll=True)
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_of, has_aux=True)(state.params, batch)
+                from repro.optim.adamw import adamw_update
+                params, opt, gn = adamw_update(state.params, grads,
+                                               state.opt, 1e-4)
+                from repro.train.state import TrainState
+                return TrainState(params, opt, state.rng), {"loss": loss}
+        return fn
+    if shape.kind == "prefill":
+        def fn(params, batch, caches):
+            return bundle.prefill(params, batch, caches, ctx=ctx,
+                                  unroll_layers=unroll_layers,
+                                  unroll=unroll_layers)
+        return fn
+    # decode
+    def fn(params, tokens, serve_state):
+        return bundle.decode(params, tokens, serve_state, ctx=ctx,
+                             unroll_layers=unroll_layers)
+    return fn
+
+
+def lower_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, mesh_name: str,
+               *, unroll_layers=False, want_hlo=False, strategy="tp",
+               microbatch=1):
+    """Lower+compile one cell; returns (compiled, lowered, meta)."""
+    ctx = ctx_for_mesh(mesh, strategy=strategy)
+    bundle = build(cfg, dec_pos_len=min(shape.seq_len, 2048))
+    specs = input_specs(cfg, shape)
+    b_sh = _batch_shardings(mesh, ctx, specs)
+    fn = _make_step(bundle, cfg, shape, ctx, unroll_layers=unroll_layers,
+                    microbatch=microbatch)
+
+    if shape.kind == "train":
+        state = abstract_train_state(bundle.abstract_params(),
+                                     cfg.moment_dtype)
+        st_sh = _state_shardings(mesh, ctx, bundle, cfg.moment_dtype)
+        jitted = jax.jit(fn, in_shardings=(st_sh, b_sh),
+                         donate_argnums=(0,))
+        lowered = jitted.lower(state, specs)
+    elif shape.kind == "prefill":
+        params = bundle.abstract_params()
+        p_sh = _tree_shardings(mesh, ctx, bundle.descs)
+        caches = bundle.abstract_caches(shape.global_batch, shape.seq_len)
+        c_sh = _cache_shardings(mesh, ctx, bundle, shape.global_batch,
+                                shape.seq_len)
+        jitted = jax.jit(fn, in_shardings=(p_sh, b_sh, c_sh),
+                         donate_argnums=(2,))
+        lowered = jitted.lower(params, specs, caches)
+    else:
+        params = bundle.abstract_params()
+        p_sh = _tree_shardings(mesh, ctx, bundle.descs)
+        caches = bundle.abstract_caches(shape.global_batch, shape.seq_len)
+        c_sh = _cache_shardings(mesh, ctx, bundle, shape.global_batch,
+                                shape.seq_len)
+        serve_state = lm.ServeState(
+            caches=caches, pos=jax.ShapeDtypeStruct((), jnp.int32))
+        ss_sh = lm.ServeState(caches=c_sh, pos=_shard(mesh, P()))
+        jitted = jax.jit(fn, in_shardings=(p_sh, b_sh["tokens"], ss_sh),
+                         donate_argnums=(2,))
+        lowered = jitted.lower(params, specs["tokens"], serve_state)
+
+    compiled = lowered.compile()
+    return compiled, lowered
+
+
+def _cost_of(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0))}
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str,
+             with_probes: bool = True, strategy: str = "tp",
+             cache_dtype: str = "", microbatch: int = 1) -> CellResult:
+    cfg = get_config(arch)
+    if cache_dtype:
+        cfg = cfg.with_(cache_dtype=cache_dtype)
+    shape = SHAPES_BY_NAME[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        return CellResult(arch, shape_name, mesh_name, shape.kind,
+                          ok=True, error=f"SKIP: {reason}")
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    res = CellResult(arch, shape_name, mesh_name, shape.kind, ok=False)
+    t0 = time.time()
+    try:
+        compiled, lowered = lower_cell(cfg, shape, mesh, mesh_name,
+                                       strategy=strategy,
+                                       microbatch=microbatch)
+        ma = compiled.memory_analysis()
+        res.bytes_per_device = int(getattr(ma, "temp_size_in_bytes", 0)
+                                   + getattr(ma, "output_size_in_bytes", 0))
+        res.argument_bytes = int(getattr(ma, "argument_size_in_bytes", 0))
+        res.output_bytes = int(getattr(ma, "output_size_in_bytes", 0))
+        res.flops_cost = _cost_of(compiled)["flops"]
+
+        if with_probes:
+            n_per = n_periods_of(cfg)
+            res.n_periods = n_per
+            probes = {}
+            for k in (1, 2):
+                if n_per < 2 and k == 2:
+                    probes[k] = dict(probes[1])
+                    break
+                pcfg = probe_cfg(cfg, k)
+                c_k, l_k = lower_cell(pcfg, shape, mesh, mesh_name,
+                                      unroll_layers=True, strategy=strategy,
+                                      microbatch=microbatch)
+                cost = _cost_of(c_k)
+                coll = collective_bytes_of_hlo(c_k.as_text())
+                probes[k] = {"flops": cost["flops"], "bytes": cost["bytes"],
+                             "coll_bytes": float(coll.total_bytes)}
+                if k == 1:
+                    res.collective_kinds = dict(coll.by_kind)
+                    res.unresolved_trip = coll.unresolved_trip
+            res.probe1, res.probe2 = probes[1], probes[2]
+        res.ok = True
+    except Exception:
+        res.error = traceback.format_exc(limit=25)
+    res.compile_s = time.time() - t0
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-probes", action="store_true")
+    ap.add_argument("--strategy", default="tp", choices=["tp", "dp_only"])
+    ap.add_argument("--cache-dtype", default="")
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--out", default="results")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = (["single", "multi"] if args.mesh == "both" else [args.mesh])
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = (list(SHAPES_BY_NAME) if (args.all or not args.shape)
+              else [args.shape])
+
+    failures = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for mesh_name in meshes:
+                out_path = os.path.join(
+                    args.out, f"{arch}__{shape_name}__{mesh_name}.json")
+                if os.path.exists(out_path):
+                    print(f"[skip cached] {out_path}")
+                    continue
+                r = run_cell(arch, shape_name, mesh_name,
+                             with_probes=not args.no_probes,
+                             strategy=args.strategy,
+                             cache_dtype=args.cache_dtype,
+                             microbatch=args.microbatch)
+                with open(out_path, "w") as f:
+                    json.dump(dataclasses.asdict(r), f, indent=1)
+                status = "OK" if r.ok else "FAIL"
+                if r.error and r.error.startswith("SKIP"):
+                    status = "SKIP"
+                print(f"[{status}] {arch} {shape_name} {mesh_name} "
+                      f"({r.compile_s:.0f}s) mem/dev="
+                      f"{(r.bytes_per_device or 0)/1e9:.2f}GB")
+                if not r.ok:
+                    failures += 1
+                    print(r.error)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

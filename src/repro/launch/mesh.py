@@ -1,0 +1,24 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so
+importing this module never touches jax device state.  The single-pod mesh
+is (data=16, model=16) = 256 chips (one TPU v5e pod); the multi-pod mesh
+adds a leading pod axis: (pod=2, data=16, model=16) = 512 chips.  Data
+parallelism (and FSDP weight sharding) runs over ('pod', 'data'); tensor/
+expert/sequence parallelism over 'model'.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_devices: int = 1, model: int = 1):
+    """Tiny mesh over however many local devices exist (tests/examples)."""
+    data = max(n_devices // model, 1)
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,141 @@
+"""Shared layers: norms (incl. OLMo non-parametric LN), RoPE, MLP/SwiGLU."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamDesc
+
+EPS = 1e-5
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def norm_descs(cfg: ModelConfig, d: Optional[int] = None):
+    d = d or cfg.d_model
+    if cfg.norm == "rmsnorm":
+        return {"scale": ParamDesc((d,), ("embed_nofsdp",), init="ones")}
+    if cfg.norm == "layernorm":
+        return {"scale": ParamDesc((d,), ("embed_nofsdp",), init="ones"),
+                "bias": ParamDesc((d,), ("embed_nofsdp",), init="zeros")}
+    if cfg.norm == "nonparametric_ln":
+        return {}
+    raise ValueError(cfg.norm)
+
+
+def apply_norm(cfg: ModelConfig, p, x: jax.Array) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + EPS)
+        return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+    # (non-)parametric layernorm
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), -1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + EPS)
+    if cfg.norm == "layernorm":
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_head_norm(x: jax.Array, scale: jax.Array) -> jax.Array:
+    """QK-norm over the trailing head_dim (chameleon / OLMoE)."""
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + EPS)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., seq, ..., head_dim); positions: (..., seq).
+
+    positions is broadcast against x's leading dims up to the seq axis; we
+    require x shape (B, S, *rest, hd) and positions (B, S) or (S,).
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = jnp.arange(0, half, dtype=jnp.float32)
+    inv_freq = theta ** (-freq / half)
+    if positions.ndim == 1:
+        ang = positions.astype(jnp.float32)[:, None] * inv_freq  # (S, half)
+        ang = ang.reshape((1,) + ang.shape)                      # (1,S,half)
+    else:
+        ang = positions.astype(jnp.float32)[..., None] * inv_freq  # (B,S,half)
+    # insert singleton head dims so ang broadcasts against x (..., hd)
+    extra = x.ndim - ang.ndim
+    ang = ang.reshape(ang.shape[:-1] + (1,) * extra + (half,))
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU or plain)
+# ---------------------------------------------------------------------------
+
+def mlp_descs(cfg: ModelConfig, d_ff: Optional[int] = None):
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    out = {"w_up": ParamDesc((d, ff), ("embed", "mlp")),
+           "w_down": ParamDesc((ff, d), ("mlp", "embed"))}
+    if cfg.glu:
+        out["w_gate"] = ParamDesc((d, ff), ("embed", "mlp"))
+    return out
+
+
+def apply_mlp(cfg: ModelConfig, p, x: jax.Array) -> jax.Array:
+    h = jnp.einsum("...d,df->...f", x, p["w_up"])
+    if cfg.glu:
+        g = jnp.einsum("...d,df->...f", x, p["w_gate"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * h
+    else:
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(h.dtype)
+    return jnp.einsum("...f,fd->...d", h, p["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_descs(cfg: ModelConfig):
+    out = {"tok": ParamDesc((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                            init_scale=0.02)}
+    if not cfg.tied_embeddings:
+        out["unembed"] = ParamDesc((cfg.vocab_size, cfg.d_model),
+                                   ("vocab", "embed"), init_scale=0.02)
+    return out
+
+
+def embed_tokens(p, tokens: jax.Array, dtype, ctx=None) -> jax.Array:
+    w = p["tok"]
+    if ctx is not None and ctx.mesh is not None:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        v_ax = (ctx.tp_axis if w.shape[0] % ctx.tp_size == 0 else None)
+        w = jax.lax.with_sharding_constraint(
+            w, NamedSharding(ctx.mesh, P(v_ax, None)))
+    return w.astype(dtype)[tokens]
+
+
+def unembed(cfg: ModelConfig, p, x: jax.Array, ctx=None) -> jax.Array:
+    """Project to vocab logits.
+
+    The table is FSDP-sharded on d (the contraction dim) — naively that
+    collides with the batch's use of the data axis and GSPMD can decide to
+    replicate the *activations* (catastrophic: full (B,S,V) per device).
+    We force the cheap resolution instead: gather the table over the data
+    axis (vocab stays TP-sharded when divisible) right before the matmul.
+    """
+    w = p.get("unembed", p["tok"])
+    if ctx is not None and ctx.mesh is not None:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        v_ax = (ctx.tp_axis if w.shape[0] % ctx.tp_size == 0 else None)
+        w = jax.lax.with_sharding_constraint(
+            w, NamedSharding(ctx.mesh, P(v_ax, None)))
+    return jnp.einsum("...d,vd->...v", x, w.astype(x.dtype))

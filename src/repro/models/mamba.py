@@ -1,0 +1,171 @@
+"""Mamba (S6) selective-scan block for the Jamba hybrid.
+
+Training/prefill uses a *chunked associative scan*: the sequence is cut into
+``cfg.ssm_chunk`` chunks iterated with ``lax.scan`` (bounded memory), and the
+affine recurrence h_t = dA_t h_{t-1} + dBu_t inside a chunk is solved with
+``jax.lax.associative_scan`` (log-depth, elementwise — TPU VPU friendly).
+Decode is the O(1) single-step recurrence on a carried (conv, ssm) state.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamDesc
+
+
+class MambaCache(NamedTuple):
+    conv: jax.Array   # (B, d_conv-1, inner) last inputs
+    ssm: jax.Array    # (B, inner, d_state)
+
+
+def _dims(cfg: ModelConfig):
+    mc = cfg.mamba
+    inner = mc.expand * cfg.d_model
+    dt_rank = mc.dt_rank or cfg.d_model // 16
+    return mc, inner, dt_rank
+
+
+def mamba_descs(cfg: ModelConfig):
+    mc, inner, dt_rank = _dims(cfg)
+    d = cfg.d_model
+    return {
+        "in_proj": ParamDesc((d, 2, inner), ("embed", None, "mamba_inner")),
+        "conv_w": ParamDesc((mc.d_conv, inner), (None, "mamba_inner"),
+                            init="uniform_small"),
+        "conv_b": ParamDesc((inner,), ("mamba_inner",), init="zeros"),
+        "x_proj": ParamDesc((inner, dt_rank + 2 * mc.d_state),
+                            ("mamba_inner", None)),
+        "dt_proj": ParamDesc((dt_rank, inner), (None, "mamba_inner"),
+                             init_scale=dt_rank ** -0.5),
+        "dt_bias": ParamDesc((inner,), ("mamba_inner",), init="decay_bias"),
+        "A_log": ParamDesc((inner, mc.d_state), ("mamba_inner", None),
+                           init="decay_bias"),
+        "D_skip": ParamDesc((inner,), ("mamba_inner",), init="ones"),
+        "out_proj": ParamDesc((inner, d), ("mamba_inner", "embed")),
+    }
+
+
+def mamba_cache_desc(cfg: ModelConfig, batch: int):
+    mc, inner, _ = _dims(cfg)
+    return MambaCache(
+        conv=ParamDesc((batch, mc.d_conv - 1, inner),
+                       ("batch", None, "mamba_inner"),
+                       dtype=cfg.compute_dtype, init="zeros"),
+        ssm=ParamDesc((batch, inner, mc.d_state),
+                      ("batch", "mamba_inner", None),
+                      dtype="float32", init="zeros"))
+
+
+def _causal_conv(cfg: ModelConfig, p, u: jax.Array, prepend: jax.Array):
+    """Depthwise causal conv1d. u: (B,S,I); prepend: (B,d_conv-1,I)."""
+    mc = cfg.mamba
+    full = jnp.concatenate([prepend.astype(u.dtype), u], axis=1)
+    out = p["conv_b"].astype(jnp.float32)
+    acc = jnp.zeros(u.shape, jnp.float32) + out
+    for j in range(mc.d_conv):
+        acc = acc + (p["conv_w"][j].astype(jnp.float32)
+                     * full[:, j:j + u.shape[1]].astype(jnp.float32))
+    return jax.nn.silu(acc).astype(u.dtype)
+
+
+def _ssm_inputs(cfg: ModelConfig, p, u: jax.Array):
+    """u: (B,Q,I) conv'd+silu'd -> dA (B,Q,I,N) f32, dBu f32, C (B,Q,N).
+
+    Called PER CHUNK inside the scan — materializing (B,S,I,N) for the whole
+    sequence would be ~TBs for jamba-scale inner dims."""
+    mc, _, dt_rank = _dims(cfg)
+    proj = jnp.einsum("bsi,ir->bsr", u, p["x_proj"]).astype(jnp.float32)
+    dt_raw = proj[..., :dt_rank]
+    B_ = proj[..., dt_rank:dt_rank + mc.d_state]
+    C_ = proj[..., dt_rank + mc.d_state:]
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,ri->bsi", dt_raw, p["dt_proj"].astype(jnp.float32))
+        + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                  # (I, N)
+    dA = jnp.exp(dt[..., None] * A)                               # (B,S,I,N)
+    dBu = dt[..., None] * B_[:, :, None, :] * u.astype(jnp.float32)[..., None]
+    return dA, dBu, C_
+
+
+def _chunk_scan(dA_c, dBu_c, h0):
+    """Solve h_t = dA_t h_{t-1} + dBu_t within a chunk given h0 (B,I,N)."""
+    def op(l, r):
+        a1, b1 = l
+        a2, b2 = r
+        return a2 * a1, a2 * b1 + b2
+    a, b = jax.lax.associative_scan(op, (dA_c, dBu_c), axis=1)
+    h = a * h0[:, None] + b                                       # (B,Q,I,N)
+    return h
+
+
+def mamba_forward(cfg: ModelConfig, p, x: jax.Array, *, unroll: bool = False,
+                  initial: MambaCache = None):
+    """x: (B, S, D) -> (B, S, D). Full-sequence (train / prefill)."""
+    mc, inner, _ = _dims(cfg)
+    B, S, D = x.shape
+    xz = jnp.einsum("bsd,dci->bcsi", x, p["in_proj"])
+    u_raw, z = xz[:, 0], xz[:, 1]
+    prepend = (initial.conv if initial is not None
+               else jnp.zeros((B, mc.d_conv - 1, inner), x.dtype))
+    u = _causal_conv(cfg, p, u_raw, prepend)
+
+    Q = min(cfg.ssm_chunk, S)
+    S_pad = S
+    u_s = u
+    if S % Q:                      # pad the input; padded positions are
+        pad = Q - S % Q            # masked to IDENTITY transitions below
+        u_s = jnp.pad(u, ((0, 0), (0, pad), (0, 0)))
+        S_pad = S + pad
+    n_chunks = S_pad // Q
+    pad_valid = jnp.arange(S_pad) < S
+    h0 = (initial.ssm.astype(jnp.float32) if initial is not None
+          else jnp.zeros((B, inner, mc.d_state), jnp.float32))
+
+    def body(h, c):
+        # dA/dBu are computed PER CHUNK: materializing (B,S,I,N) for the
+        # whole sequence would be TBs at jamba scale
+        u_c = jax.lax.dynamic_slice_in_dim(u_s, c * Q, Q, 1)
+        dA, dBu, C_ = _ssm_inputs(cfg, p, u_c)
+        if S_pad != S:
+            v = jax.lax.dynamic_slice_in_dim(pad_valid, c * Q, Q, 0)
+            dA = jnp.where(v[None, :, None, None], dA, 1.0)
+            dBu = jnp.where(v[None, :, None, None], dBu, 0.0)
+        h_chunk = _chunk_scan(dA, dBu, h)
+        y_c = jnp.einsum("bqin,bqn->bqi", h_chunk, C_)
+        return h_chunk[:, -1], y_c
+
+    # checkpoint: the scan bwd otherwise stacks per-chunk (B,Q,I,N) tensors
+    body_ck = jax.checkpoint(body,
+                             policy=jax.checkpoint_policies.nothing_saveable)
+    h_last, ys = jax.lax.scan(body_ck, h0, jnp.arange(n_chunks),
+                              unroll=n_chunks if unroll else 1)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S_pad, inner)[:, :S]
+    y = y + p["D_skip"].astype(jnp.float32) * u.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = jnp.einsum("bsi,id->bsd", y.astype(x.dtype), p["out_proj"])
+    new_cache = MambaCache(conv=jnp.concatenate(
+        [prepend, u_raw], 1)[:, -(mc.d_conv - 1):].astype(jnp.float32).astype(x.dtype),
+        ssm=h_last)
+    return out, new_cache
+
+
+def mamba_decode(cfg: ModelConfig, p, x: jax.Array, cache: MambaCache):
+    """One-token decode. x: (B, 1, D)."""
+    mc, inner, _ = _dims(cfg)
+    B = x.shape[0]
+    xz = jnp.einsum("bsd,dci->bcsi", x, p["in_proj"])
+    u_raw, z = xz[:, 0], xz[:, 1]                                 # (B,1,I)
+    u = _causal_conv(cfg, p, u_raw, cache.conv)
+    dA, dBu, C_ = _ssm_inputs(cfg, p, u)
+    h = dA[:, 0] * cache.ssm.astype(jnp.float32) + dBu[:, 0]      # (B,I,N)
+    y = jnp.einsum("bin,bn->bi", h, C_[:, 0])[:, None]
+    y = y + p["D_skip"].astype(jnp.float32) * u.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = jnp.einsum("bsi,id->bsd", y.astype(x.dtype), p["out_proj"])
+    new_conv = jnp.concatenate([cache.conv, u_raw.astype(cache.conv.dtype)],
+                               1)[:, 1:]
+    return out, MambaCache(conv=new_conv, ssm=h)

@@ -1,0 +1,77 @@
+"""Parameter descriptors: one source of truth for shape / init / sharding.
+
+Every model module builds a pytree of ``ParamDesc`` leaves. From that tree we
+derive (a) randomly-initialized params (smoke tests / examples), (b) abstract
+``ShapeDtypeStruct`` trees (dry-run lowering — no allocation), and (c)
+``PartitionSpec`` trees via the logical-axis rules in ``repro.parallel.sharding``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDesc:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]   # logical axis name per dim
+    dtype: Optional[str] = None          # None -> model param_dtype
+    init: str = "normal"                 # normal | zeros | ones | uniform_small
+    init_scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def is_desc(x: Any) -> bool:
+    return isinstance(x, ParamDesc)
+
+
+def tree_map_descs(fn, tree):
+    return jax.tree_util.tree_map(fn, tree, is_leaf=is_desc)
+
+
+def abstract_params(descs, default_dtype: str):
+    def f(d: ParamDesc):
+        return jax.ShapeDtypeStruct(d.shape, jnp.dtype(d.dtype or default_dtype))
+    return tree_map_descs(f, descs)
+
+
+def init_params(descs, key: jax.Array, default_dtype: str):
+    """Materialize params (for small/smoke configs; NOT used by the dry-run)."""
+    leaves, treedef = jax.tree_util.tree_flatten(descs, is_leaf=is_desc)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    out = []
+    for d, k in zip(leaves, keys):
+        dt = jnp.dtype(d.dtype or default_dtype)
+        if d.init == "zeros":
+            v = jnp.zeros(d.shape, dt)
+        elif d.init == "ones":
+            v = jnp.ones(d.shape, dt)
+        elif d.init == "uniform_small":
+            v = jax.random.uniform(k, d.shape, jnp.float32, -0.5, 0.5).astype(dt)
+        elif d.init == "decay_bias":
+            # rwkv/mamba style: biases spread over a range for stable decay
+            v = jnp.linspace(-6.0, -0.5, int(np.prod(d.shape)),
+                             dtype=jnp.float32).reshape(d.shape).astype(dt)
+        else:
+            fan_in = d.shape[0] if len(d.shape) > 1 else max(d.shape[-1], 1)
+            scale = d.init_scale if d.init_scale else 1.0 / np.sqrt(fan_in)
+            v = (jax.random.normal(k, d.shape, jnp.float32) * scale).astype(dt)
+        out.append(v)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def count_params(descs) -> int:
+    leaves = jax.tree_util.tree_leaves(descs, is_leaf=is_desc)
+    return int(sum(int(np.prod(d.shape)) for d in leaves))
+
+
+# Activation logical-axis helper: annotate intermediate values so the
+# sharding layer can constrain them (used sparingly; XLA propagates the rest).
+def logical_axes(**kw) -> Dict[str, Any]:
+    return kw

@@ -1,0 +1,113 @@
+"""Model registry: config -> params / steps / input specs.
+
+One uniform surface consumed by smoke tests, the dry-run, the trainer and
+the examples:
+
+    bundle = build(cfg)
+    params = bundle.init_params(key)            # smoke configs only
+    loss, metrics = bundle.loss(params, batch, ctx=ctx)
+    logits, state = bundle.prefill(params, batch, caches, ctx=ctx)
+    logits, state = bundle.decode(params, tokens, state, ctx=ctx)
+
+``input_specs(cfg, shape)`` builds ShapeDtypeStruct stand-ins for the
+dry-run (weak-type-correct, shardable, no allocation): token ids for LM
+archs, precomputed frame embeddings for ``[audio]`` (stubbed frontend),
+token ids (VQ image tokens live in the vocab) for ``[vlm]``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, lm
+from repro.models.params import (
+    abstract_params, count_params, init_params, tree_map_descs,
+)
+
+
+@dataclasses.dataclass
+class ModelBundle:
+    cfg: ModelConfig
+    descs: Any
+    loss: Callable
+    forward: Optional[Callable]
+    prefill: Callable
+    decode: Callable
+    cache_descs: Callable      # (batch, t_max) -> cache desc tree
+
+    def abstract_params(self):
+        return abstract_params(self.descs, self.cfg.param_dtype)
+
+    def init_params(self, key):
+        return init_params(self.descs, key, self.cfg.param_dtype)
+
+    def abstract_caches(self, batch: int, t_max: int):
+        return abstract_params(self.cache_descs(batch, t_max),
+                               self.cfg.compute_dtype)
+
+    def init_caches(self, key, batch: int, t_max: int):
+        return init_params(self.cache_descs(batch, t_max), key,
+                           self.cfg.compute_dtype)
+
+    def n_params(self) -> int:
+        return count_params(self.descs)
+
+
+def build(cfg: ModelConfig, dec_pos_len: int = 448) -> ModelBundle:
+    if cfg.is_encdec:
+        descs = encdec.model_descs(cfg, dec_pos_len=dec_pos_len)
+        return ModelBundle(
+            cfg=cfg, descs=descs,
+            loss=lambda p, b, **kw: encdec.loss_fn(cfg, p, b, **kw),
+            forward=None,
+            prefill=lambda p, b, caches, **kw: encdec.prefill(
+                cfg, p, b, caches, **kw),
+            decode=lambda p, t, s, **kw: encdec.decode_step(
+                cfg, p, t, s, **kw),
+            cache_descs=lambda batch, t_max: encdec.cache_descs(
+                cfg, batch, t_max))
+    descs = lm.model_descs(cfg)
+    return ModelBundle(
+        cfg=cfg, descs=descs,
+        loss=lambda p, b, **kw: lm.loss_fn(cfg, p, b, **kw),
+        forward=lambda p, t, **kw: lm.forward(cfg, p, t, **kw),
+        prefill=lambda p, b, caches, **kw: lm.prefill(
+            cfg, p, b["tokens"], caches, **kw),
+        decode=lambda p, t, s, **kw: lm.decode_step(cfg, p, t, s, **kw),
+        cache_descs=lambda batch, t_max: lm.cache_descs(cfg, batch, t_max))
+
+
+# ---------------------------------------------------------------------------
+# Input specs (dry-run stand-ins; also shapes for the data pipeline)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStructs for one (arch × input-shape) cell.
+
+    train/prefill: the full (global_batch, seq_len) token batch.
+    decode: one new token per sequence (the KV cache of length seq_len is a
+    separate argument produced by ``ModelBundle.abstract_caches``).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    tok = jnp.int32
+    if shape.kind == "train":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), tok)}
+        if cfg.is_encdec:
+            specs["enc_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.encdec.enc_seq, cfg.d_model),
+                jnp.dtype(cfg.compute_dtype))
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), tok)}
+        if cfg.is_encdec:
+            specs["enc_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.encdec.enc_seq, cfg.d_model),
+                jnp.dtype(cfg.compute_dtype))
+        return specs
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), tok)}
+    raise ValueError(shape.kind)

@@ -1,0 +1,207 @@
+"""RWKV-6 "Finch" block: data-dependent decay time-mix + channel-mix.
+
+Per head h with head_dim n, state S in R^{n x n}:
+
+    y_t = r_t^T (S_{t-1} + diag(u * k_t) v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T          (w_t in (0,1), per channel)
+
+Training/prefill uses the *chunked* closed form (FLA-style): within a chunk
+of Q tokens all cross-token terms are matmuls weighted by cumulative decay
+ratios exp(logP_{t-1} - logP_s) (s <= t-1, exponent <= 0 so it is stable),
+and the state is carried across chunks with a ``lax.scan``. Decode is the
+O(1) recurrence. Token shift uses RWKV-6's data-dependent lerp (ddlerp).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamDesc
+
+MIX_KEYS = ("w", "r", "k", "v", "g")  # decay, receptance, key, value, gate
+
+
+class RWKVCache(NamedTuple):
+    last_tm: jax.Array   # (B, 1, D) last input of time-mix (token shift)
+    last_cm: jax.Array   # (B, 1, D) last input of channel-mix
+    S: jax.Array         # (B, H, n, n) wkv state, float32
+
+
+def _dims(cfg: ModelConfig):
+    rc = cfg.rwkv
+    H = cfg.d_model // rc.head_dim
+    return rc, H, rc.head_dim
+
+
+def rwkv_descs(cfg: ModelConfig):
+    rc, H, n = _dims(cfg)
+    d, ff = cfg.d_model, cfg.d_ff
+    return {
+        # --- time mix ---
+        "mu_x": ParamDesc((d,), ("embed_nofsdp",), init="uniform_small"),
+        "mu": ParamDesc((5, d), (None, "embed_nofsdp"), init="uniform_small"),
+        "tm_w1": ParamDesc((d, 5, rc.mix_lora), ("embed_nofsdp", None, "lora")),
+        "tm_w2": ParamDesc((5, rc.mix_lora, d), (None, "lora", "embed_nofsdp")),
+        "w_r": ParamDesc((d, H, n), ("embed", "heads", "head_dim")),
+        "w_k": ParamDesc((d, H, n), ("embed", "heads", "head_dim")),
+        "w_v": ParamDesc((d, H, n), ("embed", "heads", "head_dim")),
+        "w_g": ParamDesc((d, H, n), ("embed", "heads", "head_dim")),
+        "w_o": ParamDesc((H, n, d), ("heads", "head_dim", "embed")),
+        "dec_w1": ParamDesc((d, rc.decay_lora), ("embed_nofsdp", "lora")),
+        "dec_w2": ParamDesc((rc.decay_lora, H, n), ("lora", "heads", "head_dim")),
+        "dec_bias": ParamDesc((H, n), ("heads", "head_dim"), init="decay_bias"),
+        "bonus_u": ParamDesc((H, n), ("heads", "head_dim"),
+                             init="uniform_small"),
+        "gn_scale": ParamDesc((H, n), ("heads", "head_dim"), init="ones"),
+        "gn_bias": ParamDesc((H, n), ("heads", "head_dim"), init="zeros"),
+        # --- channel mix ---
+        "mu_ck": ParamDesc((d,), ("embed_nofsdp",), init="uniform_small"),
+        "mu_cr": ParamDesc((d,), ("embed_nofsdp",), init="uniform_small"),
+        "w_ck": ParamDesc((d, ff), ("embed", "mlp")),
+        "w_cv": ParamDesc((ff, d), ("mlp", "embed")),
+        "w_cr": ParamDesc((d, d), ("embed", "embed_nofsdp")),
+    }
+
+
+def rwkv_cache_desc(cfg: ModelConfig, batch: int):
+    rc, H, n = _dims(cfg)
+    d = cfg.d_model
+    return RWKVCache(
+        last_tm=ParamDesc((batch, 1, d), ("batch", None, None),
+                          dtype=cfg.compute_dtype, init="zeros"),
+        last_cm=ParamDesc((batch, 1, d), ("batch", None, None),
+                          dtype=cfg.compute_dtype, init="zeros"),
+        S=ParamDesc((batch, H, n, n), ("batch", "heads", None, None),
+                    dtype="float32", init="zeros"))
+
+
+def _shift(x: jax.Array, last: jax.Array) -> jax.Array:
+    """x_{t-1} stream. x: (B,S,D); last: (B,1,D) value before the window."""
+    return jnp.concatenate([last.astype(x.dtype), x[:, :-1]], axis=1)
+
+
+def _ddlerp(p, x, xx):
+    """RWKV-6 data-dependent token-shift mix -> dict of 5 mixed inputs."""
+    delta = xx - x
+    x_base = x + delta * p["mu_x"].astype(x.dtype)
+    z = jnp.tanh(jnp.einsum("bsd,dfm->bsfm", x_base, p["tm_w1"]))
+    adj = jnp.einsum("bsfm,fmd->bsfd", z, p["tm_w2"]) + p["mu"].astype(x.dtype)
+    return {k: x + delta * adj[:, :, i] for i, k in enumerate(MIX_KEYS)}
+
+
+def _tm_project(cfg, p, mixed):
+    """-> r,k,v,g (B,S,H,n) and per-channel decay w (B,S,H,n) in (0,1), f32."""
+    r = jnp.einsum("bsd,dhn->bshn", mixed["r"], p["w_r"])
+    k = jnp.einsum("bsd,dhn->bshn", mixed["k"], p["w_k"])
+    v = jnp.einsum("bsd,dhn->bshn", mixed["v"], p["w_v"])
+    g = jax.nn.silu(jnp.einsum("bsd,dhn->bshn", mixed["g"], p["w_g"])
+                    .astype(jnp.float32))
+    w_raw = (jnp.einsum("bsd,dl,lhn->bshn",
+                        mixed["w"].astype(jnp.float32),
+                        p["dec_w1"].astype(jnp.float32),
+                        p["dec_w2"].astype(jnp.float32))
+             + p["dec_bias"].astype(jnp.float32))
+    logw = -jnp.exp(w_raw)                       # log of decay, < 0
+    return r, k, v, g, logw
+
+
+def _group_norm(p, y):
+    """Per-head layer norm of the wkv output. y: (B,S,H,n) float32."""
+    mu = jnp.mean(y, -1, keepdims=True)
+    var = jnp.mean(jnp.square(y - mu), -1, keepdims=True)
+    yn = (y - mu) * jax.lax.rsqrt(var + 64e-5)
+    return yn * p["gn_scale"].astype(jnp.float32) + p["gn_bias"].astype(jnp.float32)
+
+
+def _wkv_chunked(r, k, v, logw, u, S0, chunk, unroll):
+    """Chunked WKV-6. r,k,v (B,S,H,n); logw (B,S,H,n) f32; u (H,n).
+
+    Returns y (B,S,H,n) f32 and final state (B,H,n,n) f32.
+    """
+    B, S, H, n = r.shape
+    Q = min(chunk, S)
+    S_pad = S
+    if S % Q:                      # pad with identity decay (logw=0) and
+        pad = Q - S % Q            # zero k/v so the carried state is exact
+        zpad = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r, k, v = (jnp.pad(a, zpad) for a in (r, k, v))
+        logw = jnp.pad(logw, zpad)
+        S_pad = S + pad
+    n_chunks = S_pad // Q
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    causal_lt = jnp.tril(jnp.ones((Q, Q), bool), -1)              # s < t
+
+    def body(S_c, c):
+        sl = lambda a: jax.lax.dynamic_slice_in_dim(a, c * Q, Q, 1)
+        r_c, k_c, v_c, lw_c = sl(rf), sl(kf), sl(vf), sl(logw)
+        logP = jnp.cumsum(lw_c, axis=1)                           # inclusive
+        logPm1 = logP - lw_c                                      # exclusive
+        # inter-chunk: r_t decayed against carried state
+        rdec = r_c * jnp.exp(logPm1)
+        y_inter = jnp.einsum("bthi,bhij->bthj", rdec, S_c)
+        # intra-chunk: A[t,s] = sum_i r_t k_s exp(logPm1_t - logP_s), s < t
+        expo = logPm1[:, :, None] - logP[:, None, :]              # (B,t,s,H,n)
+        expo = jnp.where(causal_lt[None, :, :, None, None], expo, -jnp.inf)
+        A = jnp.einsum("bthi,bshi,btshi->bths", r_c, k_c,
+                       jnp.exp(expo))
+        diag = jnp.einsum("bthi,bthi->bth", r_c, u.astype(jnp.float32) * k_c)
+        y_intra = jnp.einsum("bths,bshj->bthj", A, v_c) \
+            + diag[..., None] * v_c
+        # state update to chunk end
+        k_tilde = k_c * jnp.exp(logP[:, -1:] - logP)
+        S_new = jnp.exp(logP[:, -1])[..., None] * S_c \
+            + jnp.einsum("bshi,bshj->bhij", k_tilde, v_c)
+        return S_new, y_inter + y_intra
+
+    # checkpoint: the scan bwd otherwise stacks per-chunk (B,Q,Q,H,n)
+    # decay tensors across all chunks (TBs at rwkv6-7b scale)
+    body_ck = jax.checkpoint(body,
+                             policy=jax.checkpoint_policies.nothing_saveable)
+    S_last, ys = jax.lax.scan(body_ck, S0, jnp.arange(n_chunks),
+                              unroll=n_chunks if unroll else 1)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S_pad, H, n)[:, :S]
+    return y, S_last
+
+
+def rwkv_time_mix(cfg: ModelConfig, p, x: jax.Array, cache: RWKVCache = None,
+                  *, unroll: bool = False):
+    rc, H, n = _dims(cfg)
+    B, S, D = x.shape
+    last = cache.last_tm if cache is not None else jnp.zeros((B, 1, D), x.dtype)
+    S0 = (cache.S if cache is not None
+          else jnp.zeros((B, H, n, n), jnp.float32))
+    mixed = _ddlerp(p, x, _shift(x, last))
+    r, k, v, g, logw = _tm_project(cfg, p, mixed)
+    if S == 1:  # decode: direct recurrence
+        y = jnp.einsum("bthi,bhij->bthj", r.astype(jnp.float32),
+                       S0 + (p["bonus_u"].astype(jnp.float32) * k.astype(jnp.float32))[:, 0, :, :, None]
+                       * v.astype(jnp.float32)[:, 0, :, None, :])
+        S_last = jnp.exp(logw[:, 0])[..., None] * S0 \
+            + k.astype(jnp.float32)[:, 0, :, :, None] * v.astype(jnp.float32)[:, 0, :, None, :]
+    else:
+        y, S_last = _wkv_chunked(r, k, v, logw, p["bonus_u"], S0,
+                                 cfg.ssm_chunk, unroll)
+    y = _group_norm(p, y) * g
+    out = jnp.einsum("bshn,hnd->bsd", y.astype(x.dtype), p["w_o"])
+    return out, (x[:, -1:], S_last)
+
+
+def rwkv_channel_mix(cfg: ModelConfig, p, x: jax.Array,
+                     cache: RWKVCache = None):
+    B, S, D = x.shape
+    last = cache.last_cm if cache is not None else jnp.zeros((B, 1, D), x.dtype)
+    xx = _shift(x, last)
+    xk = x + (xx - x) * p["mu_ck"].astype(x.dtype)
+    xr = x + (xx - x) * p["mu_cr"].astype(x.dtype)
+    kk = jnp.einsum("bsd,df->bsf", xk, p["w_ck"])
+    kk = jnp.square(jax.nn.relu(kk.astype(jnp.float32))).astype(x.dtype)
+    vv = jnp.einsum("bsf,fd->bsd", kk, p["w_cv"])
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["w_cr"])
+                        .astype(jnp.float32)).astype(x.dtype)
+    return rr * vv, x[:, -1:]

@@ -1,0 +1,132 @@
+"""Logical-axis sharding rules: FSDP('data') x TP('model') x DP(+'pod').
+
+Every parameter dimension carries a *logical* axis name (see
+``repro.models.params.ParamDesc``); this module maps logical axes to mesh
+axes and produces ``PartitionSpec`` trees for params, optimizer moments,
+activations and caches. GSPMD's padded uneven sharding is relied on for
+head counts not divisible by the model axis (phi3 40H/10kv, yi 56H,
+whisper 12H) — see DESIGN.md §5.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.params import ParamDesc, is_desc, tree_map_descs
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelCtx:
+    mesh: Optional[Mesh]
+    dp_axes: Tuple[str, ...] = ("data",)
+    tp_axis: str = "model"
+    fsdp_axes: Tuple[str, ...] = ("data",)
+    ep: bool = True
+    #: "tp" (default): TP over the model axis, Megatron-SP residuals.
+    #: "dp_only": batch over ALL axes, weights FSDP over data, no TP — the
+    #: right mapping for small dense models whose per-layer compute cannot
+    #: amortize TP/SP collectives (see EXPERIMENTS §Perf H1).
+    strategy: str = "tp"
+
+    @property
+    def tp_size(self) -> int:
+        if self.mesh is None or self.strategy == "dp_only":
+            return 1
+        return self.mesh.shape[self.tp_axis]
+
+    @property
+    def dp_size(self) -> int:
+        if not self.mesh:
+            return 1
+        return math.prod(self.mesh.shape[a] for a in self.dp_axes)
+
+    @property
+    def fsdp_size(self) -> int:
+        if not self.mesh:
+            return 1
+        return math.prod(self.mesh.shape[a] for a in self.fsdp_axes)
+
+
+def ctx_for_mesh(mesh: Optional[Mesh], *, ep: bool = True,
+                 fsdp: bool = True, strategy: str = "tp") -> ParallelCtx:
+    if mesh is None:
+        return ParallelCtx(None, ep=False)
+    if strategy == "dp_only":
+        dp = tuple(a for a in ("pod", "data", "model")
+                   if a in mesh.axis_names)
+        return ParallelCtx(mesh, dp_axes=dp,
+                           fsdp_axes=("data",) if fsdp else (),
+                           ep=False, strategy="dp_only")
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return ParallelCtx(mesh, dp_axes=dp or ("data",),
+                       fsdp_axes=("data",) if fsdp else (),
+                       ep=ep, strategy=strategy)
+
+
+# logical axis -> mesh axis resolver --------------------------------------
+#
+# Two passes (top-level jit in_shardings require exact divisibility, so no
+# GSPMD padding is available here):
+#   1. primary: embed->FSDP(data), {vocab,heads,mlp,expert,mamba_inner,
+#      kv_heads,mla_lora}->TP(model), batch->DP — each only if divisible;
+#   2. TP fallback: if no dim took the model axis (e.g. kv_heads=8 < 16),
+#      the first divisible fallback dim (q_per_kv, then head_dim) takes it —
+#      contractions over a TP-sharded head_dim turn into psums, which is the
+#      baseline cost of uneven head counts (hillclimb lever, see §Perf).
+
+_TP_PRIMARY = ("vocab", "heads", "mlp", "expert", "mamba_inner", "kv_heads",
+               "mla_lora")
+_TP_FALLBACK = ("q_per_kv", "head_dim")
+
+
+def spec_for(ctx: ParallelCtx, desc: ParamDesc) -> P:
+    if ctx.mesh is None:
+        return P(*([None] * len(desc.shape)))
+    spec = [None] * len(desc.shape)
+    tp_used = ctx.strategy == "dp_only"     # disables TP assignment
+    fsdp = (ctx.fsdp_axes if len(ctx.fsdp_axes) > 1
+            else (ctx.fsdp_axes[0] if ctx.fsdp_axes else None))
+    dp = ctx.dp_axes if len(ctx.dp_axes) > 1 else ctx.dp_axes[0]
+    for i, (ax, n) in enumerate(zip(desc.logical, desc.shape)):
+        if ax == "embed" and fsdp is not None and n % ctx.fsdp_size == 0:
+            spec[i] = fsdp
+        elif ax in _TP_PRIMARY and not tp_used and n % ctx.tp_size == 0:
+            spec[i] = ctx.tp_axis
+            tp_used = True
+        elif ax == "batch" and n % ctx.dp_size == 0:
+            spec[i] = dp
+    if not tp_used:
+        for i, (ax, n) in enumerate(zip(desc.logical, desc.shape)):
+            if (spec[i] is None and ax in _TP_FALLBACK
+                    and n % ctx.tp_size == 0):
+                spec[i] = ctx.tp_axis
+                tp_used = True
+                break
+    return P(*spec)
+
+
+def param_specs(ctx: ParallelCtx, descs):
+    return tree_map_descs(lambda d: spec_for(ctx, d), descs)
+
+
+def param_shardings(ctx: ParallelCtx, descs):
+    assert ctx.mesh is not None
+    return tree_map_descs(lambda d: NamedSharding(ctx.mesh, spec_for(ctx, d)),
+                          descs)
+
+
+# activations ---------------------------------------------------------------
+
+def batch_spec(ctx: ParallelCtx, ndim_rest: int = 1) -> P:
+    dp = ctx.dp_axes if len(ctx.dp_axes) > 1 else ctx.dp_axes[0]
+    return P(dp, *([None] * ndim_rest))
+
+
+def constrain(ctx: ParallelCtx, x, spec: P):
+    if ctx.mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))

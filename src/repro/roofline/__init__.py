@@ -1,0 +1,3 @@
+from repro.roofline.constants import TPU_V5E  # noqa: F401
+from repro.roofline.hlo import collective_bytes_of_hlo  # noqa: F401
+from repro.roofline.analysis import roofline_terms  # noqa: F401

@@ -1,0 +1,22 @@
+"""Target hardware constants (TPU v5e — the assignment's production part)."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Chip:
+    name: str
+    peak_bf16_flops: float        # FLOP/s per chip
+    hbm_bw: float                 # bytes/s per chip
+    hbm_bytes: float              # capacity per chip
+    ici_link_bw: float            # bytes/s per link per direction
+    ici_links: int                # links per chip used by a 2D torus
+
+
+TPU_V5E = Chip(
+    name="tpu_v5e",
+    peak_bf16_flops=197e12,
+    hbm_bw=819e9,
+    hbm_bytes=16e9,
+    ici_link_bw=50e9,             # ~50 GB/s/link (assignment constant)
+    ici_links=4,                  # 2D torus: 4 links/chip
+)

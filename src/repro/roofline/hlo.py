@@ -1,0 +1,152 @@
+"""Collective-traffic extraction from post-SPMD optimized HLO text.
+
+``cost_analysis()`` does not report collective bytes, so we parse
+``compiled.as_text()``: every ``all-gather`` / ``all-reduce`` /
+``reduce-scatter`` / ``all-to-all`` / ``collective-permute`` instruction
+contributes its operand bytes (per-device shapes — the module is already
+partitioned).
+
+While-loop handling: HLO puts loop bodies in separate computations; a
+collective inside a body runs ``trip_count`` times.  We resolve the
+computation call graph (while ``body=``/``condition=`` attributes), extract
+the trip count from the condition's comparison constant (best effort;
+falls back to 1 with a flag), and multiply.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?\S+\s*=\s*(\([^=]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    #: bytes per kind, per device, trip-count-weighted
+    by_kind: Dict[str, int]
+    #: number of collective instructions (static count)
+    n_instructions: int
+    #: True if some while trip count could not be resolved (counted as 1)
+    unresolved_trip: bool
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.by_kind.values())
+
+
+def _split_computations(hlo: str) -> Dict[str, str]:
+    """computation name -> body text."""
+    comps: Dict[str, str] = {}
+    cur_name, cur_lines = None, []
+    for line in hlo.splitlines():
+        m = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?\s*->.*{",
+                     line) or re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+{",
+                                       line)
+        if m and not line.startswith(" "):
+            cur_name = m.group(1)
+            cur_lines = [line]
+            comps[cur_name] = ""
+        elif cur_name is not None:
+            cur_lines.append(line)
+            if line.startswith("}"):
+                comps[cur_name] = "\n".join(cur_lines)
+                cur_name = None
+    return comps
+
+
+def _while_calls(comp_text: str) -> List[Tuple[str, str]]:
+    """(body, condition) computation names of while instructions."""
+    out = []
+    for m in re.finditer(
+            r"while\(.*?\).*?condition=%?([\w\.\-]+).*?body=%?([\w\.\-]+)",
+            comp_text):
+        out.append((m.group(2), m.group(1)))
+    for m in re.finditer(
+            r"while\(.*?\).*?body=%?([\w\.\-]+).*?condition=%?([\w\.\-]+)",
+            comp_text):
+        out.append((m.group(1), m.group(2)))
+    return out
+
+
+def _trip_count(cond_text: str) -> Optional[int]:
+    """Best-effort: the comparison constant in the loop condition."""
+    consts = [int(c) for c in
+              re.findall(r"constant\((-?\d+)\)", cond_text)]
+    consts = [c for c in consts if c > 0]
+    return max(consts) if consts else None
+
+
+def _direct_collective_bytes(comp_text: str) -> Dict[str, int]:
+    out: Dict[str, int] = {}
+    for m in _INSTR_RE.finditer(comp_text):
+        shape_str, kind = m.group(1), m.group(2)
+        out[kind] = out.get(kind, 0) + _shape_bytes(shape_str)
+    return out
+
+
+def collective_bytes_of_hlo(hlo: str) -> CollectiveStats:
+    comps = _split_computations(hlo)
+    unresolved = False
+
+    # weight of each computation = product of enclosing while trip counts;
+    # build naive one-level nesting resolution by fixpoint
+    weights: Dict[str, int] = {name: 1 for name in comps}
+    entry_like = [n for n, t in comps.items() if "ENTRY" in t.split("\n")[0]
+                  or n.startswith("main")]
+    # collect while edges
+    edges: List[Tuple[str, str, int]] = []     # (parent, body, trips)
+    for name, text in comps.items():
+        for body, cond in _while_calls(text):
+            trips = _trip_count(comps.get(cond, ""))
+            if trips is None:
+                trips = 1
+                unresolved = True
+            edges.append((name, body, trips))
+
+    # propagate weights down the while nesting (few levels; iterate)
+    for _ in range(8):
+        changed = False
+        for parent, body, trips in edges:
+            w = weights.get(parent, 1) * trips
+            if body in weights and weights[body] < w:
+                weights[body] = w
+                changed = True
+        if not changed:
+            break
+
+    by_kind: Dict[str, int] = {}
+    n_instr = 0
+    for name, text in comps.items():
+        direct = _direct_collective_bytes(text)
+        n_instr += sum(1 for _ in _INSTR_RE.finditer(text))
+        for kind, b in direct.items():
+            by_kind[kind] = by_kind.get(kind, 0) + b * weights.get(name, 1)
+    return CollectiveStats(by_kind, n_instr, unresolved)

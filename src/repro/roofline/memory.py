@@ -1,0 +1,102 @@
+"""Analytic per-device HBM residency model (TPU-realistic lower bound).
+
+``memory_analysis()`` from the XLA:CPU pipeline is an UPPER bound for the
+TPU target: the CPU backend lacks the reduce-scatter fusion pass (full-size
+f32 gradient all-reduces stay materialized) and its arena packing is
+conservative around remat barriers.  This module computes the structural
+residency a TPU execution needs:
+
+train:   params + moments(2) + grads + remat-saved layer-boundary
+         activations + logits transient + one layer's working set
+serve:   params + KV/SSM caches + one layer's working set
+
+Both numbers are reported side by side in §Dry-run; the fit/no-fit verdict
+against 16 GB uses the analytic number, the XLA number tracks relative
+change across perf iterations.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.registry import build
+from repro.parallel.sharding import ParallelCtx
+
+
+def _dtype_bytes(name: str) -> int:
+    return {"bfloat16": 2, "float16": 2, "float32": 4, "float64": 8,
+            "int32": 4, "int8": 1}[name]
+
+
+@dataclasses.dataclass
+class MemoryEstimate:
+    params: float
+    moments: float
+    grads: float
+    activations: float
+    caches: float
+    transients: float
+
+    @property
+    def total(self) -> float:
+        return (self.params + self.moments + self.grads + self.activations
+                + self.caches + self.transients)
+
+    def row(self) -> Dict[str, float]:
+        return dataclasses.asdict(self) | {"total": self.total}
+
+
+def analytic_memory(cfg: ModelConfig, shape: ShapeConfig, *,
+                    dp: int = 16, tp: int = 16,
+                    microbatch: int = 1) -> MemoryEstimate:
+    n_chips = dp * tp
+    bundle = build(cfg, dec_pos_len=min(shape.seq_len, 2048))
+    n_params = bundle.n_params()
+    pb = _dtype_bytes(cfg.param_dtype)
+    mb = _dtype_bytes(cfg.moment_dtype)
+
+    # params/moments/grads fully sharded over the whole mesh (FSDP x TP)
+    params = n_params * pb / n_chips
+    if shape.kind == "train":
+        moments = 2 * n_params * mb / n_chips
+        grads = n_params * 4 / n_chips          # f32 at reduce-scatter width
+        # remat-full saves the residual per layer boundary, seq-sharded
+        B_loc = max(shape.global_batch // dp, 1)
+        S_loc = shape.seq_len // tp if shape.seq_len % tp == 0 else shape.seq_len
+        act = (cfg.n_layers * B_loc * S_loc * cfg.d_model * 2) / microbatch
+        if cfg.is_encdec:
+            act += (cfg.encdec.n_enc_layers * B_loc
+                    * cfg.encdec.enc_seq * cfg.d_model * 2)
+        # logits transient: (B_loc, S, V) split over tp via vocab (if it
+        # divides) or via the sequence; f32 + bf16 copies
+        tp_split = tp if (cfg.vocab_size % tp == 0
+                          or shape.seq_len % tp == 0) else 1
+        logits = B_loc * shape.seq_len * cfg.vocab_size / tp_split
+        transients = logits * 6 / microbatch
+        return MemoryEstimate(params, moments, grads, act, 0.0, transients)
+
+    # serving
+    caches_tree = bundle.cache_descs(shape.global_batch, shape.seq_len)
+    import numpy as np
+    import jax
+    from repro.models.params import is_desc
+    total_cache = 0
+    for d in jax.tree_util.tree_leaves(caches_tree, is_leaf=is_desc):
+        n = int(np.prod(d.shape))
+        bytes_ = n * _dtype_bytes(d.dtype or cfg.compute_dtype)
+        # sharded over whichever axes divide (batch->dp, kv/lora dims->tp)
+        shard = 1
+        if d.shape[0] % dp == 0 and "batch" in (d.logical[0] or ""):
+            shard *= dp
+        for ax, sz in zip(d.logical, d.shape):
+            if ax in ("kv_heads", "mla_lora", "heads", "mamba_inner",
+                      "head_dim") and sz % tp == 0:
+                shard *= tp
+                break
+        total_cache += bytes_ / shard
+    B_loc = max(shape.global_batch // dp, 1)
+    S = shape.seq_len if shape.kind == "prefill" else 1
+    act = 2 * B_loc * min(S, 4096) * cfg.d_model * 2
+    return MemoryEstimate(params, 0.0, 0.0, act, total_cache,
+                          transients=act)

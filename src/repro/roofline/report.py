@@ -1,0 +1,142 @@
+"""Aggregate dry-run cell JSONs into the §Dry-run / §Roofline tables.
+
+Reads ``results/<arch>__<shape>__<mesh>.json`` written by launch/dryrun.py,
+computes the three-term roofline per cell (probe extrapolation), and emits
+markdown tables + a machine-readable CSV.
+
+Usage:  python -m repro.roofline.report --results results/ [--csv out.csv]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import SHAPES_BY_NAME, get_config
+from repro.roofline.analysis import (
+    analytic_traffic_bytes, model_flops_for, roofline_terms,
+)
+from repro.roofline.constants import TPU_V5E
+
+
+def load_cells(results_dir: str) -> List[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def cell_terms(cell: dict):
+    if not cell.get("ok") or not cell.get("probe1"):
+        return None
+    arch, shape_name, mesh = cell["arch"], cell["shape"], cell["mesh"]
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    n_chips = 512 if mesh == "multi" else 256
+    return roofline_terms(
+        arch, shape_name, mesh,
+        probe1=cell["probe1"], probe2=cell["probe2"],
+        n_periods=cell["n_periods"],
+        model_flops=model_flops_for(cfg, shape),
+        n_chips=n_chips)
+
+
+def fmt_bytes(b: Optional[float]) -> str:
+    if b is None:
+        return "-"
+    return f"{b/1e9:.2f}"
+
+
+def dryrun_table(cells: List[dict]) -> str:
+    lines = ["| arch | shape | mesh | status | mem/dev GB | compile s | "
+             "collectives (probe, GB: AG/AR/RS/A2A/CP) |",
+             "|---|---|---|---|---|---|---|"]
+    for c in cells:
+        status = "OK" if c["ok"] else "FAIL"
+        if (c.get("error") or "").startswith("SKIP"):
+            status = "SKIP (long-context on full attention)"
+        kinds = c.get("collective_kinds") or {}
+        coll = "/".join(
+            f"{kinds.get(k, 0)/1e9:.2f}"
+            for k in ("all-gather", "all-reduce", "reduce-scatter",
+                      "all-to-all", "collective-permute"))
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} | {status} "
+            f"| {fmt_bytes(c.get('bytes_per_device'))} "
+            f"| {c.get('compile_s', 0):.0f} | {coll} |")
+    return "\n".join(lines)
+
+
+def roofline_table(cells: List[dict]) -> str:
+    """t_mem(HLO) is the assignment formula (unfused upper bound from the
+    CPU pipeline); t_mem(model) is the fused-TPU traffic model — the
+    bottleneck verdict and roofline fraction use the three assignment
+    terms with memory replaced by min(HLO, model) to avoid the CPU
+    pipeline's systematic overstatement."""
+    lines = ["| arch | shape | mesh | t_comp ms | t_mem(HLO) ms | "
+             "t_mem(model) ms | t_coll ms | bottleneck | useful-FLOPs | "
+             "roofline-frac |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for c in cells:
+        t = cell_terms(c)
+        if t is None:
+            continue
+        cfg = get_config(c["arch"])
+        shape = SHAPES_BY_NAME[c["shape"]]
+        t_model = (analytic_traffic_bytes(cfg, shape, t.n_chips)
+                   / t.chip.hbm_bw)
+        t_mem_eff = min(t.t_memory, t_model)
+        terms = {"compute": t.t_compute, "memory": t_mem_eff,
+                 "collective": t.t_collective}
+        bottleneck = max(terms, key=terms.get)
+        t_bound = max(terms.values())
+        t_useful = t.model_flops / t.n_chips / t.chip.peak_bf16_flops
+        frac = t_useful / t_bound if t_bound else 0.0
+        lines.append(
+            f"| {t.arch} | {t.shape} | {t.mesh} | {t.t_compute*1e3:.1f} "
+            f"| {t.t_memory*1e3:.1f} | {t_model*1e3:.1f} "
+            f"| {t.t_collective*1e3:.1f} "
+            f"| {bottleneck} | {t.useful_flops_ratio:.2f} "
+            f"| {frac:.3f} |")
+    return "\n".join(lines)
+
+
+def csv_rows(cells: List[dict]) -> List[Dict[str, object]]:
+    out = []
+    for c in cells:
+        t = cell_terms(c)
+        if t is None:
+            continue
+        row = t.row()
+        row["bytes_per_device"] = c.get("bytes_per_device")
+        out.append(row)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="results")
+    ap.add_argument("--csv", default=None)
+    args = ap.parse_args()
+    cells = load_cells(args.results)
+    print("## §Dry-run\n")
+    print(dryrun_table(cells))
+    print("\n## §Roofline (single-pod baselines)\n")
+    print(roofline_table([c for c in cells if c["mesh"] == "single"]))
+    print("\n## §Roofline (multi-pod)\n")
+    print(roofline_table([c for c in cells if c["mesh"] == "multi"]))
+    if args.csv:
+        import csv as _csv
+        rows = csv_rows(cells)
+        if rows:
+            with open(args.csv, "w", newline="") as f:
+                w = _csv.DictWriter(f, fieldnames=list(rows[0]))
+                w.writeheader()
+                w.writerows(rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.train.state import TrainState  # noqa: F401
+from repro.train.step import make_train_step, make_serve_steps  # noqa: F401

@@ -1,0 +1,136 @@
+"""Per-architecture smoke tests (assignment requirement): reduced config of
+the same family, one forward/train step on CPU, shape + finiteness asserts;
+plus prefill/decode-vs-full-forward consistency and a parameter-count check
+of the FULL config against published totals (descriptors only — no
+allocation)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import (
+    ARCH_IDS, PUBLISHED_PARAMS, get_config, get_smoke_config,
+)
+from repro.models.registry import build, input_specs
+from repro.configs.base import SHAPES_BY_NAME
+
+
+def _batch(cfg, key, B, S):
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+    if cfg.is_encdec:
+        batch["enc_embeds"] = jax.random.normal(
+            key, (B, cfg.encdec.enc_seq, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_smoke(arch):
+    cfg = get_smoke_config(arch)
+    b = build(cfg, dec_pos_len=64)
+    key = jax.random.PRNGKey(0)
+    params = b.init_params(key)
+    batch = _batch(cfg, key, B=2, S=32)
+
+    def step(p, bt):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: b.loss(p, bt), has_aux=True)(p)
+        return loss, metrics, grads
+
+    loss, metrics, grads = jax.jit(step)(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), arch
+    # gradients exist, are finite, and match parameter shapes
+    flat, _ = jax.tree_util.tree_flatten(grads)
+    pflat, _ = jax.tree_util.tree_flatten(params)
+    assert len(flat) == len(pflat)
+    for g, p in zip(flat, pflat):
+        assert g.shape == p.shape
+        assert bool(jnp.all(jnp.isfinite(g.astype(jnp.float32)))), arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_consistency(arch):
+    """prefill(S) + decode(1) must agree with full forward on S+1 tokens."""
+    cfg = get_smoke_config(arch)
+    b = build(cfg, dec_pos_len=64)
+    key = jax.random.PRNGKey(1)
+    params = b.init_params(key)
+    B, S, T_MAX = 2, 16, 32
+    toks = jax.random.randint(key, (B, S + 1), 0, cfg.vocab_size)
+    batch = _batch(cfg, key, B, S)
+    batch["tokens"] = toks[:, :S]
+    caches = b.init_caches(key, B, T_MAX)
+    logits_p, state = jax.jit(lambda p, bt, c: b.prefill(p, bt, c))(
+        params, batch, caches)
+    logits_d, _ = jax.jit(lambda p, t, s: b.decode(p, t, s))(
+        params, toks[:, S:S + 1], state)
+
+    if cfg.is_encdec:
+        from repro.models import encdec, common
+        enc_out = encdec.encode(cfg, params, batch["enc_embeds"])
+        x, _ = encdec.decode_tokens(cfg, params, toks, enc_out)
+        ref = common.unembed(cfg, params["embed"], x).astype(jnp.float32)
+    else:
+        from repro.models import lm
+        ref, _ = lm.forward(cfg, params, toks)
+        ref = ref.astype(jnp.float32)
+
+    # bf16 tolerance; MLA absorbed decode reorders matmuls
+    assert jnp.max(jnp.abs(logits_p.astype(jnp.float32) - ref[:, S - 1])) < 0.05
+    assert jnp.max(jnp.abs(logits_d.astype(jnp.float32) - ref[:, S])) < 0.05
+    assert bool((jnp.argmax(logits_d, -1) == jnp.argmax(ref[:, S], -1)).all())
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_count_matches_published(arch):
+    cfg = get_config(arch)
+    n = build(cfg, dec_pos_len=448).n_params()
+    pub = PUBLISHED_PARAMS[arch]
+    assert abs(n - pub) / pub < 0.04, (
+        f"{arch}: {n/1e9:.2f}B vs published {pub/1e9:.2f}B")
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_input_specs_all_shapes(arch):
+    cfg = get_config(arch)
+    for name, shape in SHAPES_BY_NAME.items():
+        specs = input_specs(cfg, shape)
+        assert "tokens" in specs
+        if shape.kind == "decode":
+            assert specs["tokens"].shape == (shape.global_batch, 1)
+        else:
+            assert specs["tokens"].shape == (shape.global_batch,
+                                             shape.seq_len)
+
+
+def test_layer_groups_cover_all_layers():
+    from repro.models.lm import layer_groups, layer_kinds
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        if cfg.is_encdec:
+            continue
+        groups = layer_groups(cfg)
+        reconstructed = []
+        for g in groups:
+            for _ in range(g.n_repeats):
+                reconstructed.extend(g.kinds)
+        assert reconstructed == layer_kinds(cfg), arch
+        # the decomposition must be compact (small HLO): few groups
+        assert len(groups) <= 3, (arch, len(groups))
+
+
+def test_jamba_grouping_period8():
+    cfg = get_config("jamba-1.5-large-398b")
+    from repro.models.lm import layer_groups
+    (g,) = layer_groups(cfg)
+    assert len(g.kinds) == 8 and g.n_repeats == 9
+    assert g.kinds[4][0] == "attn"                     # l % 8 == 4
+    assert sum(k[0] == "attn" for k in g.kinds) == 1   # 1:7 interleave
+    assert sum(k[1] == "moe" for k in g.kinds) == 4    # every other layer
+
+
+def test_deepseek_grouping_first_dense():
+    cfg = get_config("deepseek-v2-236b")
+    from repro.models.lm import layer_groups
+    gs = layer_groups(cfg)
+    assert gs[0].kinds == (("attn", "dense"),) and gs[0].n_repeats == 1
+    assert gs[1].kinds == (("attn", "moe"),) and gs[1].n_repeats == 59

@@ -1,0 +1,55 @@
+"""Dry-run machinery sanity (full 80-cell sweep runs via
+`python -m repro.launch.dryrun --all --mesh both`; this test keeps one
+fast cell under pytest in a subprocess with the 512-device env)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+SCRIPT = textwrap.dedent("""
+    import json
+    from repro.launch.dryrun import run_cell
+    r = run_cell("olmo-1b", "decode_32k", "single", with_probes=True)
+    print(json.dumps({
+        "ok": r.ok, "err": (r.error or "")[-400:],
+        "mem": r.bytes_per_device, "p1": r.probe1, "p2": r.probe2,
+        "n_periods": r.n_periods, "kinds": r.collective_kinds,
+        "unresolved": r.unresolved_trip}))
+""")
+
+
+def test_one_dryrun_cell():
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    env.pop("XLA_FLAGS", None)      # dryrun sets its own 512-device flag
+    proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert out["ok"], out["err"]
+    assert out["n_periods"] == 16
+    # decode fits comfortably in HBM
+    assert out["mem"] < 16e9
+    # probes carry the three roofline ingredients
+    for p in (out["p1"], out["p2"]):
+        assert p["flops"] > 0 and p["bytes"] > 0
+    # per-period deltas are positive (deeper probe costs more)
+    assert out["p2"]["flops"] > out["p1"]["flops"]
+
+
+def test_mesh_shapes():
+    src = open(os.path.join(os.path.dirname(__file__), "..", "src",
+                            "repro", "launch", "mesh.py")).read()
+    assert "(2, 16, 16)" in src and "(16, 16)" in src
+    assert '("pod", "data", "model")' in src
+
+
+def test_dryrun_sets_device_flag_first():
+    """The XLA flag must be set before any jax import (assignment §0)."""
+    src = open(os.path.join(os.path.dirname(__file__), "..", "src",
+                            "repro", "launch", "dryrun.py")).read()
+    flag_pos = src.index("xla_force_host_platform_device_count")
+    jax_pos = src.index("import jax")
+    assert flag_pos < jax_pos

@@ -1,0 +1,90 @@
+"""Unit tests for the durable-linearizability checker itself (it must
+accept/reject hand-built histories correctly, or every other verdict is
+meaningless)."""
+from repro.core.durable import (
+    collect_ops, durably_linearizable, linearizable, well_formed,
+)
+from repro.core.objects import CounterSpec, RegisterSpec, StackSpec, EMPTY
+from repro.core.sim import Event
+
+
+def H(*evs):
+    return list(evs)
+
+
+def inv(t, oid, op, *args):
+    return Event("inv", t, oid, op, tuple(args))
+
+
+def res(t, oid, r=None):
+    return Event("res", t, oid, result=r)
+
+
+def crash(m):
+    return Event("crash", machine=m)
+
+
+def test_sequential_counter_ok():
+    h = H(inv(0, 0, "inc"), res(0, 0, 0), inv(0, 1, "read"), res(0, 1, 1))
+    assert durably_linearizable(h, CounterSpec())
+
+
+def test_lost_update_rejected():
+    # inc completed (returned), then a later read misses it -> not lin.
+    h = H(inv(0, 0, "inc"), res(0, 0, 0),
+          crash(0),
+          inv(1, 1, "read"), res(1, 1, 0))
+    assert not durably_linearizable(h, CounterSpec())
+
+
+def test_pending_op_may_be_dropped():
+    # inc has no response (crash mid-op): read seeing 0 is fine
+    h = H(inv(0, 0, "inc"), crash(0), inv(1, 1, "read"), res(1, 1, 0))
+    assert durably_linearizable(h, CounterSpec())
+
+
+def test_pending_op_may_take_effect():
+    # ... and read seeing 1 is also fine (pending op linearized)
+    h = H(inv(0, 0, "inc"), crash(0), inv(1, 1, "read"), res(1, 1, 1))
+    assert durably_linearizable(h, CounterSpec())
+
+
+def test_concurrent_overlap_allows_reordering():
+    # two overlapping writes: either order OK for a later read
+    h = H(inv(0, 0, "write", 1), inv(1, 1, "write", 2),
+          res(0, 0), res(1, 1),
+          inv(0, 2, "read"), res(0, 2, 1))
+    assert linearizable(h, RegisterSpec())
+    h2 = h[:-1] + [res(0, 2, 2)]
+    assert linearizable(h2, RegisterSpec())
+
+
+def test_realtime_order_enforced():
+    # write(1) completes BEFORE write(2) is invoked; read=1 afterwards bad
+    h = H(inv(0, 0, "write", 1), res(0, 0),
+          inv(1, 1, "write", 2), res(1, 1),
+          inv(0, 2, "read"), res(0, 2, 1))
+    assert not linearizable(h, RegisterSpec())
+
+
+def test_stack_lifo():
+    h = H(inv(0, 0, "push", 5), res(0, 0),
+          inv(0, 1, "push", 6), res(0, 1),
+          inv(1, 2, "pop"), res(1, 2, 6),
+          inv(1, 3, "pop"), res(1, 3, 5),
+          inv(1, 4, "pop"), res(1, 4, EMPTY))
+    assert linearizable(h, StackSpec())
+    bad = h[:5] + [res(1, 2, 5)] + h[6:]
+    assert not linearizable(bad, StackSpec())
+
+
+def test_well_formedness():
+    assert well_formed(H(inv(0, 0, "read"), res(0, 0, 0)))
+    assert well_formed(H(inv(0, 0, "read"), crash(0)))        # pending OK
+    assert not well_formed(H(inv(0, 0, "read"), inv(0, 1, "read")))
+    assert not well_formed(H(res(0, 0, 0)))
+
+
+def test_collect_ops_marks_pending():
+    ops = collect_ops(H(inv(0, 0, "inc"), crash(0)))
+    assert len(ops) == 1 and not ops[0].completed

@@ -1,0 +1,82 @@
+"""Elastic scaling: recover state from the pool and re-shard onto a
+smaller mesh (8 -> 4 devices).  Runs in a subprocess so the forced device
+count doesn't leak into other tests."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import numpy as np
+    import jax, jax.numpy as jnp
+
+    from repro.configs import get_smoke_config
+    from repro.data.pipeline import DataPipeline, SyntheticLMSource, shard_plan
+    from repro.dsm.pool import DSMPool
+    from repro.dsm.recovery import RecoveryManager
+    from repro.models.registry import build
+    from repro.parallel.sharding import ctx_for_mesh
+    from repro.train.elastic import remesh, shardings_for, shrink_plan
+    from repro.train.loop import run_durable_loop, _state_objects
+    from repro.train.state import init_train_state
+    from repro.train.step import make_train_step
+
+    cfg = get_smoke_config("olmo-1b")
+    bundle = build(cfg)
+    key = jax.random.PRNGKey(0)
+
+    # --- run on the 8-device mesh, committing durably -------------------
+    mesh8 = jax.make_mesh((4, 2), ("data", "model"))
+    ctx8 = ctx_for_mesh(mesh8)
+    params = bundle.init_params(key)
+    sh8 = shardings_for(ctx8, bundle.descs)
+    params = jax.tree_util.tree_map(jax.device_put, params, sh8)
+    state = init_train_state(params, key)
+    step8 = jax.jit(make_train_step(bundle, ctx8))
+    pool = DSMPool(os.environ["POOL_DIR"])
+    pipe = DataPipeline(SyntheticLMSource(cfg.vocab_size), 8, 32)
+    r = run_durable_loop(step8, state, pipe, pool, n_steps=4, commit_every=2)
+
+    # --- "cluster shrinks": rebuild on a 4-device mesh ------------------
+    mesh4 = jax.make_mesh((2, 2), ("data", "model"))
+    templates = _state_objects(r.state, r.pipeline_state)
+    objs, rec_step, src = RecoveryManager(pool).recover(templates)
+    assert rec_step == 3, rec_step
+
+    new_params, ctx4 = remesh(objs["params"], bundle.descs, mesh4)
+    # every leaf is now addressable on the 4-device mesh
+    for leaf in jax.tree_util.tree_leaves(new_params):
+        assert len(leaf.sharding.device_set) <= 4
+
+    # training continues on the shrunk mesh from the recovered state
+    state4 = init_train_state(new_params, key)
+    state4 = state4._replace(opt=state4.opt._replace(
+        step=jnp.asarray(objs["counters"]["opt_step"])))
+    step4 = jax.jit(make_train_step(bundle, ctx4))
+    batch = {k: jnp.asarray(v) for k, v in pipe.next_global().items()}
+    state4, m = step4(state4, batch)
+    assert bool(jnp.isfinite(m["loss"]))
+
+    # data shard plan reassigns the lost ranks
+    plan = shrink_plan(8, 4)
+    assert all(0 <= v < 4 for v in plan.values())
+    print(json.dumps({"ok": True, "rec_step": rec_step,
+                      "loss": float(m["loss"]), "source": src}))
+""")
+
+
+def test_elastic_shrink_8_to_4(tmp_path):
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"),
+               POOL_DIR=str(tmp_path / "pool"))
+    proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert out["ok"] and out["rec_step"] == 3

@@ -1,0 +1,132 @@
+"""The paper's §6 transformation claim, end to end:
+
+* FliT-for-CXL0 (Alg. 2) and MStore-everything yield durably linearizable
+  histories on EVERY random schedule with partial crashes;
+* the untransformed object and naively-ported original FliT (LFlush-based)
+  exhibit durability violations — the §6 motivating example.
+"""
+import pytest
+
+from repro.core.flit import DURABLE_POLICIES, NON_DURABLE_POLICIES
+from repro.core.harness import WORKLOADS, run_once
+from repro.core.semantics import Variant
+
+SEEDS = range(120)
+
+
+@pytest.mark.parametrize("workload", list(WORKLOADS), ids=str)
+@pytest.mark.parametrize("policy", DURABLE_POLICIES)
+def test_durable_policies_never_violate(workload, policy):
+    mk = WORKLOADS[workload]
+    crashed_runs = 0
+    for seed in SEEDS:
+        r = run_once(mk, policy, seed, p_crash=0.06, max_crashes=1)
+        crashed_runs += r.crashed
+        assert r.durable, (
+            f"{policy} produced a non-durably-linearizable history on "
+            f"{workload} (seed {seed}):\n"
+            + "\n".join(repr(e) for e in r.history))
+    assert crashed_runs > 10, "crash injection did not exercise crashes"
+
+
+@pytest.mark.parametrize("workload", ["counter", "stack"])
+@pytest.mark.parametrize("policy", NON_DURABLE_POLICIES)
+def test_negative_controls_violate(workload, policy):
+    """raw / original-FliT MUST lose completed operations on some schedule
+    — otherwise the checker is vacuous."""
+    mk = WORKLOADS[workload]
+    violations = sum(
+        not run_once(mk, policy, seed, p_crash=0.10, max_crashes=2).durable
+        for seed in range(250))
+    assert violations > 0, (
+        f"{policy} on {workload}: expected at least one durability "
+        f"violation across 250 seeds")
+
+
+@pytest.mark.parametrize("policy", DURABLE_POLICIES)
+def test_durable_under_lwb(policy):
+    """Alg. 2 stays correct under the LWB hardware variant (a *stronger*
+    model: remote loads imply write-back)."""
+    mk = WORKLOADS["counter"]
+    for seed in range(60):
+        r = run_once(mk, policy, seed, variant=Variant.LWB, p_crash=0.06,
+                     max_crashes=1)
+        assert r.durable, (policy, seed)
+
+
+def test_finding_flit_window_race_base():
+    """FINDING 1 (beyond the paper, surfaced by our checker): under the
+    UNRESTRICTED partial-crash model — no failure-atomic store→flush window
+    — Alg. 2 is not durably linearizable even in CXL0-BASE.  Sequence: the
+    LStore'd value is nondeterministically evicted into the owner's cache;
+    the owner crashes; the issuer's RFlush precondition (no cache holds x)
+    is then vacuously true, the op completes, and its effect is gone.  The
+    paper's Condition-2 proof step ("after [the synchronous flush] it is
+    guaranteed to reside in persistent memory") implicitly assumes this
+    window is crash-free; Simulator(respect_atomic=True) models exactly
+    that assumption, and under it the violation disappears
+    (test_durable_policies_never_violate)."""
+    mk = WORKLOADS["counter"]
+    violations = sum(
+        not run_once(mk, "flit_cxl0", seed, p_crash=0.15, max_crashes=3,
+                     p_tau=0.5, respect_atomic=False).durable
+        for seed in range(400))
+    assert violations > 0, "expected the store→flush window race"
+
+
+def test_finding_flit_not_durable_under_psn():
+    """FINDING 2: under CXL0^PSN the same window race is easier to hit —
+    the owner's crash POISONS the in-flight update held in a *surviving*
+    machine's cache directly (no eviction needed); the survivor's RFlush
+    passes vacuously and the completed operation's effect is destroyed.
+
+    The PSN-safe discipline is MStore-class operations (below) — consistent
+    with the paper's §4 guidance for pools without reliable coherence."""
+    mk = WORKLOADS["counter"]
+    violations = sum(
+        not run_once(mk, "flit_cxl0", seed, variant=Variant.PSN,
+                     p_crash=0.06, max_crashes=1,
+                     respect_atomic=False).durable
+        for seed in range(60))
+    assert violations > 0, "expected the PSN poison-loss violation"
+
+
+def test_mstore_all_durable_under_psn_unrestricted():
+    """MStore bypasses caches entirely, so poison-on-crash cannot destroy a
+    completed operation's effect — sound WITHOUT the atomic-window
+    assumption (respect_atomic=False)."""
+    mk = WORKLOADS["counter"]
+    for seed in range(60):
+        r = run_once(mk, "mstore_all", seed, variant=Variant.PSN,
+                     p_crash=0.10, max_crashes=2, respect_atomic=False)
+        assert r.durable, seed
+
+
+def test_mstore_all_durable_unrestricted_base():
+    for wl in ("counter", "stack"):
+        for seed in range(60):
+            r = run_once(WORKLOADS[wl], "mstore_all", seed, p_crash=0.12,
+                         max_crashes=3, p_tau=0.5, respect_atomic=False)
+            assert r.durable, (wl, seed)
+
+
+def test_no_crash_all_policies_linearizable():
+    """Without crashes CXL0 is sequentially consistent (paper §3.3), so even
+    the raw object is (durably) linearizable."""
+    for workload, mk in WORKLOADS.items():
+        for policy in (*DURABLE_POLICIES, *NON_DURABLE_POLICIES):
+            for seed in range(30):
+                r = run_once(mk, policy, seed, p_crash=0.0, max_crashes=0)
+                assert r.crashed == 0
+                assert r.durable, (workload, policy, seed)
+
+
+def test_multi_crash_durable():
+    """Simultaneous/multiple failures = consecutive local crashes (§6)."""
+    mk = WORKLOADS["counter"]
+    crashed = 0
+    for seed in range(80):
+        r = run_once(mk, "flit_cxl0", seed, p_crash=0.12, max_crashes=3)
+        crashed += r.crashed
+        assert r.durable, seed
+    assert crashed > 40

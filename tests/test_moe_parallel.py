@@ -1,0 +1,65 @@
+"""MoE expert parallelism: the shard_map a2a and psum paths must agree with
+the dense oracle. Runs on an 8-device mesh in a subprocess (forced host
+device count must not leak into this process)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from repro.configs import get_smoke_config
+    from repro.models import moe as moe_mod
+    from repro.models.params import init_params
+    from repro.parallel.sharding import ctx_for_mesh
+
+    cfg = get_smoke_config("olmoe-1b-7b")      # 8 experts top-2 (smoke)
+    key = jax.random.PRNGKey(0)
+    p = init_params(moe_mod.moe_descs(cfg), key, cfg.param_dtype)
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    ctx = ctx_for_mesh(mesh)
+    B, S, D = 4, 8, cfg.d_model
+    x = jax.random.normal(jax.random.fold_in(key, 1), (B, S, D),
+                          jnp.bfloat16)
+
+    y_dense, aux_dense = moe_mod.moe_forward(cfg, p, x, parallel=None)
+    with jax.sharding.use_mesh(mesh) if hasattr(jax.sharding, "use_mesh") \
+            else mesh:
+        y_a2a, aux_a2a = jax.jit(
+            lambda p, x: moe_mod.moe_forward(cfg, p, x, parallel=ctx,
+                                             mode="a2a"))(p, x)
+        y_psum, aux_psum = jax.jit(
+            lambda p, x: moe_mod.moe_forward(cfg, p, x, parallel=ctx,
+                                             mode="psum"))(p, x)
+
+    e_a2a = float(jnp.max(jnp.abs(y_a2a.astype(jnp.float32)
+                                  - y_dense.astype(jnp.float32))))
+    e_psum = float(jnp.max(jnp.abs(y_psum.astype(jnp.float32)
+                                   - y_dense.astype(jnp.float32))))
+    print(json.dumps({"e_a2a": e_a2a, "e_psum": e_psum,
+                      "aux_dense": float(aux_dense),
+                      "aux_a2a": float(aux_a2a),
+                      "aux_psum": float(aux_psum)}))
+""")
+
+
+def test_moe_ep_modes_match_dense(tmp_path):
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    # NOTE on tolerance: the a2a path routes each device's token slice
+    # LOCALLY (per-slice capacity) vs the oracle's global capacity — token
+    # drop patterns can differ at the margin; values must still be close.
+    assert out["e_a2a"] < 0.25, out
+    assert out["e_psum"] < 0.05, out
+    assert abs(out["aux_a2a"] - out["aux_dense"]) < 0.3

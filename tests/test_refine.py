@@ -1,0 +1,34 @@
+"""Variant trace-inclusion (paper §3.5): PSN/LWB refine BASE; PSN and LWB
+are incomparable. Full language inclusion via subset construction (the FDR4
+stand-in)."""
+import pytest
+
+from repro.core.refine import check_refinement
+from repro.core.semantics import Variant
+from repro.core.state import make_config
+
+CFG = make_config(2, 1)
+
+
+@pytest.mark.slow
+def test_psn_refines_base():
+    assert check_refinement(Variant.PSN, Variant.BASE, CFG).refines
+
+
+@pytest.mark.slow
+def test_lwb_refines_base():
+    assert check_refinement(Variant.LWB, Variant.BASE, CFG).refines
+
+
+def test_variants_incomparable():
+    r1 = check_refinement(Variant.PSN, Variant.LWB, CFG)
+    r2 = check_refinement(Variant.LWB, Variant.PSN, CFG)
+    assert not r1.refines and not r2.refines
+    # the witnesses are (relabelings of) the paper's litmus tests 10-12
+    assert any("crash" in w for w in r1.witness)
+    assert any("crash" in w for w in r2.witness)
+
+
+def test_base_strictly_more_permissive():
+    assert not check_refinement(Variant.BASE, Variant.LWB, CFG).refines
+    assert not check_refinement(Variant.BASE, Variant.PSN, CFG).refines
