@@ -1,12 +1,18 @@
 """DSM-runtime benchmark: durable-commit protocol throughput.
 
 The system-scale counterpart of the paper's §6.1 performance discussion:
-* sync vs async (compute/flush-overlapped) commit wall time,
-* commit bytes/s into the pool,
+* sync vs async vs sharded vs sharded-async commit wall time, swept over
+  shard counts — measures (not asserts) the compute/flush-overlap and
+  shard-parallelism wins of the sharded-async schedule;
+* commit bytes/s into the pool;
 * recovery time from pool vs peer staging.
 
 Runs a real (small) model training loop on CPU with the FliT-protocol
 committer — numbers are host-I/O bound and meant for RELATIVE comparison.
+
+Output is CSV-ish ``key,value,note`` lines; the headline comparison is
+``ckpt_commit_blocking_s,<mode>,shards=<n>`` — at >= 4 shards the
+sharded-async blocking time should be at or below sync.
 """
 from __future__ import annotations
 
@@ -28,24 +34,30 @@ from repro.train.step import make_train_step
 
 N_STEPS = 12
 COMMIT_EVERY = 2
+SHARD_SWEEP = (1, 2, 4, 8)
 
 
-def run(mode: str, tmp: str, replicate=False, crash=None):
+def run(mode: str, tmp: str, *, n_shards=1, replicate=False, crash=None):
     cfg = get_smoke_config("olmo-1b")
     bundle = build(cfg)
     key = jax.random.PRNGKey(0)
     state = init_train_state(bundle.init_params(key), key)
     step = jax.jit(make_train_step(bundle))
     pipe = DataPipeline(SyntheticLMSource(cfg.vocab_size), 4, 64)
-    pool = DSMPool(f"{tmp}/pool_{mode}_{replicate}")
-    peer = TierManager(DSMPool(f"{tmp}/peer_{mode}"), worker_id=1)
+    pool = DSMPool(f"{tmp}/pool_{mode}_{n_shards}_{replicate}")
+    peer = TierManager(DSMPool(f"{tmp}/peer_{mode}_{n_shards}"), worker_id=1)
     t0 = time.perf_counter()
     r = run_durable_loop(step, state, pipe, pool, n_steps=N_STEPS,
                          commit_every=COMMIT_EVERY, commit_mode=mode,
+                         n_shards=n_shards,
                          peer_tiers=peer if replicate else None,
                          replicate=replicate, crash_at=crash)
     wall = time.perf_counter() - t0
     return r, wall, pool
+
+
+def blocking_commit_s(r) -> float:
+    return sum(t.commit_s for t in r.timings)
 
 
 def main():
@@ -54,27 +66,44 @@ def main():
         # warmup jit
         run("sync", tmp + "/warm")
 
+        # -- schedule x shard-count sweep --------------------------------
         r_sync, t_sync, pool_s = run("sync", tmp)
-        r_async, t_async, _ = run("async", tmp)
-        commit_s_sync = sum(t.commit_s for t in r_sync.timings)
-        commit_s_async = sum(t.commit_s for t in r_async.timings)
+        commit_sync = blocking_commit_s(r_sync)
         latest = pool_s.latest_manifest()
         bytes_per_commit = sum(o["nbytes"]
                                for o in latest["objects"].values())
-        print(f"ckpt_sync_wall_s,{t_sync:.3f},{N_STEPS} steps")
-        print(f"ckpt_async_wall_s,{t_async:.3f},overlap hides flush")
-        print(f"ckpt_sync_commit_s,{commit_s_sync:.3f},blocking flush total")
-        print(f"ckpt_async_commit_s,{commit_s_async:.3f},joined in background")
         print(f"ckpt_bytes_per_commit,{bytes_per_commit},"
               f"{bytes_per_commit/1e6:.1f} MB")
-        spd = commit_s_sync / max(commit_s_async, 1e-9)
-        print(f"ckpt_async_commit_speedup,{spd:.2f},sync/async blocking time")
+        print(f"ckpt_commit_blocking_s,{commit_sync:.3f},mode=sync shards=1")
+        print(f"ckpt_wall_s,{t_sync:.3f},mode=sync shards=1")
 
-        # recovery latency: pool vs peer staging
-        _, _, pool = run("sync", tmp + "/rec")
-        t0 = time.perf_counter()
-        r2, _, pool2 = run("sync", tmp + "/rec2", replicate=True,
-                           crash={5: "before_commit"})
+        r_async, t_async, _ = run("async", tmp)
+        commit_async = blocking_commit_s(r_async)
+        print(f"ckpt_commit_blocking_s,{commit_async:.3f},"
+              f"mode=async shards=1")
+        print(f"ckpt_wall_s,{t_async:.3f},mode=async shards=1")
+
+        results = {}
+        for mode in ("sharded", "sharded-async"):
+            for n in SHARD_SWEEP:
+                r, wall, _ = run(mode, tmp, n_shards=n)
+                cb = blocking_commit_s(r)
+                results[(mode, n)] = cb
+                print(f"ckpt_commit_blocking_s,{cb:.3f},"
+                      f"mode={mode} shards={n}")
+                print(f"ckpt_wall_s,{wall:.3f},mode={mode} shards={n}")
+
+        for n in SHARD_SWEEP:
+            spd = commit_sync / max(results[("sharded-async", n)], 1e-9)
+            print(f"ckpt_sharded_async_speedup,{spd:.2f},"
+                  f"sync/sharded-async blocking time at {n} shards")
+        ok4 = results[("sharded-async", 4)] <= commit_sync
+        print(f"ckpt_sharded_async_beats_sync_at_4_shards,{ok4},"
+              f"{results[('sharded-async', 4)]:.3f}s vs {commit_sync:.3f}s")
+
+        # -- recovery latency: pool vs peer staging ----------------------
+        r2, _, _ = run("sync", tmp + "/rec2", replicate=True,
+                       crash={5: "before_commit"})
         print(f"ckpt_recoveries,{len(r2.recoveries)},"
               f"source={','.join(r2.recoveries)}")
     finally:

@@ -74,7 +74,8 @@ def main():
                              replicate=args.replicate, crash_at=crash_at)
         print(f"crashes: {r.crashes}  recoveries: {r.recoveries}")
         print(f"loss: first={r.losses[0]:.3f} last={r.losses[-1]:.3f}")
-        mean_compute = np.mean([t.compute_s for t in r.timings])
+        mean_compute = np.mean([t.compute_s for t in r.timings
+                                if t.compute_s])
         mean_commit = np.mean([t.commit_s for t in r.timings if t.commit_s])
         print(f"step time: {mean_compute*1e3:.0f} ms;   "
               f"commit (blocking part): {mean_commit*1e3:.0f} ms")

@@ -12,22 +12,55 @@ locations.  Following Alg. 2:
 Durable linearizability of the step history follows exactly as in the
 paper's §B: a commit whose completeOp (manifest rename) finished survives
 any single-worker crash; recovery always lands on SOME completed commit —
-never a torn mixture of steps (test: tests/test_dsm.py).
+never a torn mixture of steps (tests: tests/test_dsm.py and the
+process-kill suite in repro.scenarios).
 
-Two schedules:
-* ``sync``  — rflush every object, then completeOp (simple, blocking);
-* ``async`` — overlap: flushes of step s run in the background while step
-  s+1 computes; the next commit joins them first.  This is the
-  compute/flush overlap lever measured in benchmarks/bench_checkpoint.py.
+Four schedules:
+
+* ``sync``          — rflush every object serially, then completeOp
+                      (simple, blocking; the baseline);
+* ``async``         — overlap: one background flush thread per object runs
+                      while step s+1 computes; the next commit joins them
+                      before its completeOp;
+* ``sharded``       — each object's pytree is split into ``n_shards``
+                      byte-balanced leaf groups and written in PARALLEL
+                      (one LStore/RFlush pipeline per shard on a thread
+                      pool), then completeOp.  Blocking, but the flush
+                      wall-time divides by the shard-level parallelism;
+* ``sharded-async`` — the production default: sharded writes of step s are
+                      double-buffered behind compute of step s+1; commit(s)
+                      first joins + completeOps the PREVIOUS step's shards,
+                      then launches step s's shard pipelines and returns.
+                      The blocking cost is just the join of flushes that
+                      already overlapped compute.
+
+Retention: when ``retention=k`` is set, every completeOp is followed by
+``pool.gc(keep=k)`` — old manifests and the shard versions only they
+reference are deleted, bounding pool growth for long runs.
+
+Fault injection: ``fault_hook(point, step)`` is called at the three
+commit-window points ``pre_flush`` (state about to be flushed),
+``mid_flush`` (first shard/object durable, manifest NOT yet written — a
+kill here leaves a torn write) and ``post_completeOp`` (manifest rename
+done).  The scenario runner (repro.scenarios) uses it to ``os._exit`` a
+real worker process at each point and assert recovery lands on a completed
+commit.  In ``*-async`` modes ``post_completeOp`` reports the PREVIOUS
+step — the one whose manifest was just renamed.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
-from repro.dsm.pool import DSMPool, PoolObject
+import jax
+
 from repro.dsm.tiers import TierManager
+
+COMMIT_MODES = ("sync", "async", "sharded", "sharded-async")
+
+#: fault-injection points inside the commit window
+KILL_POINTS = ("pre_flush", "mid_flush", "post_completeOp")
 
 
 @dataclasses.dataclass
@@ -38,17 +71,64 @@ class CommitStats:
     bytes_written: int
     wall_s: float
     mode: str
+    n_shards: int = 1
+
+
+def auto_shard_count(total_bytes: int, *,
+                     min_shard_bytes: int = 1 << 20) -> int:
+    """THE default shard-count heuristic (single source of truth; the
+    launcher re-uses it via train/step.py): one flush pipeline per local
+    device, capped so no shard falls under ``min_shard_bytes`` — tiny
+    states degrade gracefully to fewer pipelines."""
+    per_device = max(jax.local_device_count(), 1)
+    by_bytes = max(total_bytes // min_shard_bytes, 1)
+    return max(1, min(per_device, by_bytes))
 
 
 class DurableCommitter:
     def __init__(self, tiers: TierManager, *, mode: str = "sync",
-                 replicate_to: Optional[TierManager] = None):
-        assert mode in ("sync", "async")
+                 replicate_to: Optional[TierManager] = None,
+                 n_shards: Optional[int] = None,
+                 retention: Optional[int] = None,
+                 fault_hook: Optional[Callable[[str, int], None]] = None):
+        assert mode in COMMIT_MODES, mode
         self.tiers = tiers
         self.mode = mode
         self.replicate_to = replicate_to     # peer for RStore staging
-        self._pending: Optional[Dict[str, Any]] = None
+        self.n_shards = n_shards or None     # None = auto at first commit
+        self.retention = retention
+        self.fault_hook = fault_hook
+        self._pending: Optional[Tuple[int, List[str]]] = None
         self.stats: list = []
+
+    def _hook(self, point: str, step: int):
+        if self.fault_hook is not None:
+            self.fault_hook(point, step)
+
+    def _resolve_shards(self) -> int:
+        """Lazy auto shard count: sized from the actual HBM state volume
+        at the first sharded flush."""
+        if self.n_shards is None:
+            total = sum(int(getattr(l, "nbytes", 0))
+                        for tree in self.tiers.hbm.values()
+                        for l in jax.tree_util.tree_leaves(tree))
+            self.n_shards = auto_shard_count(total)
+        return self.n_shards
+
+    def _complete_op(self, step: int, written: Dict[str, Any],
+                     meta, t0, label: str) -> CommitStats:
+        """completeOp = atomic manifest rename, then retention GC."""
+        seq = self.tiers.pool.commit_manifest(step, written, meta)
+        if self.retention is not None:
+            self.tiers.pool.gc(keep=self.retention)
+        st = CommitStats(step, seq, len(written),
+                         sum(o.nbytes for o in written.values()),
+                         time.perf_counter() - t0, label,
+                         (self.n_shards or 1) if "sharded" in self.mode
+                         else 1)
+        self.stats.append(st)
+        self._hook("post_completeOp", step)
+        return st
 
     # -- the Alg. 2 protocol over training state -----------------------------
     def update(self, objects: Dict[str, Any], step: Optional[int] = None):
@@ -60,54 +140,105 @@ class DurableCommitter:
             if self.replicate_to is not None:
                 self.tiers.rstore(name, self.replicate_to, tag=step)
 
-    def commit(self, step: int, meta: Optional[dict] = None) -> CommitStats:
-        """Durable commit of the current HBM state (blocking)."""
+    def commit(self, step: int, meta: Optional[dict] = None
+               ) -> Optional[CommitStats]:
+        """Durable commit of the current HBM state.  Blocking modes return
+        the stats of THIS step; async modes return the stats of the
+        PREVIOUS step whose flushes were just joined (None on the first
+        call)."""
         t0 = time.perf_counter()
         if self.mode == "async":
             return self._commit_async(step, meta, t0)
-        written: Dict[str, PoolObject] = {}
+        if self.mode == "sharded-async":
+            return self._commit_sharded_async(step, meta, t0)
+        self._hook("pre_flush", step)
+        written: Dict[str, Any] = {}
+        first = True
         for name in self.tiers.hbm:
-            written[name] = self.tiers.rflush(name)
-        seq = self.tiers.pool.commit_manifest(step, written, meta)
-        st = CommitStats(step, seq, len(written),
-                         sum(o.nbytes for o in written.values()),
-                         time.perf_counter() - t0, "sync")
-        self.stats.append(st)
-        return st
+            if self.mode == "sharded":
+                written[name] = self.tiers.rflush_sharded(
+                    name, self._resolve_shards(),
+                    post_first_shard=self._mid_flush_probe(first, step))
+            else:
+                written[name] = self.tiers.rflush(name)
+                if first:
+                    self._hook("mid_flush", step)
+            first = False
+        return self._complete_op(step, written, meta, t0, self.mode)
 
-    def _commit_async(self, step: int, meta, t0) -> CommitStats:
+    def _mid_flush_probe(self, first: bool, step: int):
+        """The mid-flush fault-injection callback — ONLY materialized when a
+        fault hook is installed, because the tiers layer must synchronously
+        wait on the first shard to fire it (which would serialize shard 0
+        and block the async launch in normal operation)."""
+        if not first or self.fault_hook is None:
+            return None
+        return lambda: self._hook("mid_flush", step)
+
+    def _commit_async(self, step: int, meta, t0) -> Optional[CommitStats]:
         """Join the previous async flushes, completeOp them, then launch
         flushes of the CURRENT state in the background."""
-        st = None
-        if self._pending is not None:
-            prev_step, names = self._pending
-            written = {n: self.tiers.flush_wait(n) for n in names}
-            seq = self.tiers.pool.commit_manifest(prev_step, written, meta)
-            st = CommitStats(prev_step, seq, len(written),
-                             sum(o.nbytes for o in written.values()),
-                             time.perf_counter() - t0, "async")
-            self.stats.append(st)
+        st = self._join_pending(meta, t0, "async")
+        self._hook("pre_flush", step)
         names = list(self.tiers.hbm)
-        for name in names:
+        for i, name in enumerate(names):
             self.tiers.flush_async(name)
+            if i == 0:
+                # first object's durable write is in flight, manifest absent
+                self._hook("mid_flush", step)
         self._pending = (step, names)
         return st
+
+    def _commit_sharded_async(self, step: int, meta, t0
+                              ) -> Optional[CommitStats]:
+        """Double-buffered sharded commit: join + completeOp step s-1's
+        shard pipelines (they overlapped compute of step s), then launch
+        step s's pipelines and return immediately."""
+        st = self._join_pending(meta, t0, "sharded-async")
+        self._hook("pre_flush", step)
+        names = list(self.tiers.hbm)
+        first = True
+        for name in names:
+            self.tiers.flush_async_sharded(
+                name, self._resolve_shards(),
+                post_first_shard=self._mid_flush_probe(first, step))
+            first = False
+        self._pending = (step, names)
+        return st
+
+    def _join_pending(self, meta, t0, label: str) -> Optional[CommitStats]:
+        if self._pending is None:
+            return None
+        prev_step, names = self._pending
+        self._pending = None        # cleared FIRST: a failed join must not
+        #                             leave already-popped names re-joinable
+        written: Dict[str, Any] = {}
+        first_err: Optional[BaseException] = None
+        for n in names:
+            try:
+                written[n] = self.tiers.flush_wait(n)
+            except Exception as e:   # join the rest, then surface the first
+                if first_err is None:
+                    first_err = e
+        if first_err is not None:
+            raise first_err          # step simply not durable; no manifest
+        return self._complete_op(prev_step, written, meta, t0, label)
 
     def drain(self, meta: Optional[dict] = None) -> Optional[CommitStats]:
         """Flush any pending async commit (planned shutdown — the paper's
         sanctioned GPF use case)."""
-        if self.mode == "async" and self._pending is not None:
-            t0 = time.perf_counter()
-            prev_step, names = self._pending
-            written = {n: self.tiers.flush_wait(n) for n in names}
-            seq = self.tiers.pool.commit_manifest(prev_step, written, meta)
-            self._pending = None
-            st = CommitStats(prev_step, seq, len(written),
-                             sum(o.nbytes for o in written.values()),
-                             time.perf_counter() - t0, "drain")
-            self.stats.append(st)
+        if self._pending is not None:
+            st = self._join_pending(meta, time.perf_counter(), "drain")
             return st
         return None
+
+    def abort_pending(self):
+        """Crash path: discard the pending commit WITHOUT completing it.
+        Outstanding writes are joined (so no stale write can land after the
+        next incarnation starts) but no manifest is written — the step is
+        simply not durable, exactly the partial-crash semantics."""
+        self._pending = None
+        self.tiers.abort_flushes()
 
 
 def gpf_snapshot(committers, step: int, meta: Optional[dict] = None):

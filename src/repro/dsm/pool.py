@@ -3,10 +3,11 @@
 On-disk layout (one directory per pool, usually on shared storage):
 
     pool/
-      objects/<object>/<version>.npz     # flattened pytree + CRC32 sidecar
+      objects/<object>/<version>.npz       # flattened pytree + CRC32 sidecar
       objects/<object>/<version>.crc
-      manifest.json                      # CURRENT committed versions
-      manifest.<n>.json                  # history (GC-bounded)
+      objects/<object>.s<k>/<version>.npz  # shard k of a SHARDED write
+      manifest.json                        # CURRENT committed versions
+      manifest.<n>.json                    # history (GC-bounded)
 
 Write protocol (the MStore/RFlush realization):
   1. write ``<version>.npz`` to a temp name, fsync;
@@ -17,6 +18,19 @@ listing every object's version + CRC.  Readers validate CRCs; a torn or
 bit-flipped shard fails validation and recovery falls back to the previous
 manifest — the recovered state is always SOME completed commit (never torn),
 which is exactly durable linearizability of the step history.
+
+Sharded writes (the sharded/sharded-async commit schedules): a pytree's
+leaves are partitioned into ``n_shards`` byte-balanced groups
+(``partition_leaves``) and each group is written — usually in parallel, one
+LStore/RFlush pipeline per shard — as an independent object
+``<name>.s<k>``.  The manifest entry for a sharded object records every
+shard's (name, version, crc) plus the leaf->shard ``assignment`` so readers
+can reassemble the pytree (``read_entry``).  Durability is unchanged: no
+shard is visible until the manifest rename, and a missing/corrupt shard
+fails CRC validation of the WHOLE object, forcing fallback to the previous
+manifest.  Manifest history is bounded by ``gc(keep=...)``, which retains
+the newest ``keep`` manifests and deletes versions (plain or sharded) that
+no retained manifest references.
 """
 from __future__ import annotations
 
@@ -39,6 +53,55 @@ class PoolObject:
     version: int
     crc: int
     nbytes: int
+
+
+@dataclasses.dataclass
+class ShardedObject:
+    """One logical object written as ``len(shards)`` independent pool
+    objects (``<name>.s<k>``).  ``assignment[k]`` lists the flattened-leaf
+    indices stored in shard k."""
+    name: str
+    version: int
+    nbytes: int
+    n_leaves: int
+    shards: List[PoolObject]
+    assignment: List[List[int]]
+
+    def to_entry(self) -> dict:
+        return {
+            "name": self.name, "version": self.version,
+            "nbytes": self.nbytes, "n_leaves": self.n_leaves,
+            "sharded": True,
+            "shards": [dataclasses.asdict(s) for s in self.shards],
+            "assignment": self.assignment,
+        }
+
+
+def manifest_entry(obj) -> dict:
+    """Serialize a PoolObject / ShardedObject / ready-made dict for the
+    manifest."""
+    if isinstance(obj, ShardedObject):
+        return obj.to_entry()
+    if dataclasses.is_dataclass(obj):
+        return dataclasses.asdict(obj)
+    return dict(obj)
+
+
+def partition_leaves(nbytes: List[int], n_shards: int) -> List[List[int]]:
+    """Byte-balanced partition of leaf indices into ``<= n_shards`` groups
+    (greedy: biggest leaf onto the lightest shard).  Never returns an empty
+    shard — the shard count is clamped to the leaf count."""
+    n_shards = max(1, min(n_shards, len(nbytes)))
+    order = sorted(range(len(nbytes)), key=lambda i: -nbytes[i])
+    loads = [0] * n_shards
+    groups: List[List[int]] = [[] for _ in range(n_shards)]
+    for i in order:
+        k = min(range(n_shards), key=lambda j: loads[j])
+        groups[k].append(i)
+        loads[k] += nbytes[i]
+    for g in groups:
+        g.sort()
+    return groups
 
 
 def _flatten(tree) -> Tuple[List[np.ndarray], Any]:
@@ -108,9 +171,30 @@ class DSMPool:
         nbytes = sum(a.nbytes for a in arrays)
         return PoolObject(name, version, crc, nbytes)
 
-    def read_object(self, name: str, version: int, treedef_like) -> Any:
+    def max_version(self, name: str) -> int:
+        """Highest version present on disk for ``name`` INCLUDING its shard
+        objects (``name.s<k>``) and torn/unreferenced files.  A fresh worker
+        incarnation seeds its version counter above this so it can never
+        overwrite a file an existing manifest still references."""
+        best = 0
+        prefix = name + ".s"
+        for d in os.listdir(self.obj_dir):
+            if d != name and not (d.startswith(prefix)
+                                  and d[len(prefix):].isdigit()):
+                continue
+            for fn in os.listdir(os.path.join(self.obj_dir, d)):
+                stem = fn.split(".")[0]
+                if stem.isdigit():
+                    best = max(best, int(stem))
+        return best
+
+    def read_object(self, name: str, version: int, treedef_like,
+                    expected_crc: Optional[int] = None) -> Any:
         """Read + CRC-validate one object version; raises CorruptObjectError
-        on mismatch (recovery then falls back to an older manifest)."""
+        on mismatch (recovery then falls back to an older manifest).
+        ``expected_crc`` (the MANIFEST-recorded crc) additionally guards
+        against the file+sidecar pair having been atomically replaced by a
+        different write since the manifest committed."""
         base = self._obj_path(name, version)
         try:
             with open(base + ".crc") as f:
@@ -129,6 +213,10 @@ class DSMPool:
             raise CorruptObjectError(f"{name}@{version}: {e}") from e
         if _crc_of_arrays(arrays) != meta["crc"]:
             raise CorruptObjectError(f"{name}@{version}: CRC mismatch")
+        if expected_crc is not None and meta["crc"] != expected_crc:
+            raise CorruptObjectError(
+                f"{name}@{version}: content does not match the manifest "
+                f"(overwritten by a later write?)")
         _, treedef = jax.tree_util.tree_flatten(treedef_like)
         return jax.tree_util.tree_unflatten(treedef, arrays)
 
@@ -142,14 +230,15 @@ class DSMPool:
                     best = max(best, int(mid))
         return best
 
-    def commit_manifest(self, step: int, objects: Dict[str, PoolObject],
+    def commit_manifest(self, step: int, objects: Dict[str, Any],
                         meta: Optional[dict] = None) -> int:
-        """Atomic commit: the step is durable iff this rename completed."""
+        """Atomic commit: the step is durable iff this rename completed.
+        ``objects`` values may be PoolObject (plain) or ShardedObject."""
         self._manifest_seq += 1
         doc = {
             "seq": self._manifest_seq,
             "step": step,
-            "objects": {name: dataclasses.asdict(o)
+            "objects": {name: manifest_entry(o)
                         for name, o in objects.items()},
             "meta": meta or {},
         }
@@ -169,6 +258,34 @@ class DSMPool:
             os.fsync(f.fileno())
         os.replace(tmp2, head)
         return self._manifest_seq
+
+    def read_entry(self, name: str, entry: dict, treedef_like) -> Any:
+        """Read + validate one manifest entry, plain or sharded, checking
+        content against the manifest-recorded CRCs.  For a sharded entry
+        every shard must validate — the shards are read in parallel,
+        mirroring the write pipelines — and any torn or corrupt shard
+        raises CorruptObjectError for the WHOLE object (recovery then falls
+        back to an older manifest)."""
+        if not entry.get("sharded"):
+            return self.read_object(name, entry["version"], treedef_like,
+                                    expected_crc=entry.get("crc"))
+        leaves: List[Any] = [None] * entry["n_leaves"]
+        shards = list(zip(entry["shards"], entry["assignment"]))
+        from concurrent.futures import ThreadPoolExecutor
+        with ThreadPoolExecutor(max_workers=len(shards)) as ex:
+            parts = list(ex.map(
+                lambda sa: self.read_object(sa[0]["name"], sa[0]["version"],
+                                            [0] * len(sa[1]),
+                                            expected_crc=sa[0].get("crc")),
+                shards))
+        for (sh, idxs), part in zip(shards, parts):
+            for i, a in zip(idxs, part):
+                leaves[i] = a
+        if any(l is None for l in leaves):
+            raise CorruptObjectError(
+                f"{name}@{entry['version']}: incomplete shard assignment")
+        _, treedef = jax.tree_util.tree_flatten(treedef_like)
+        return jax.tree_util.tree_unflatten(treedef, leaves)
 
     def manifests_desc(self) -> List[dict]:
         """All manifests, newest first."""
@@ -190,16 +307,36 @@ class DSMPool:
         return ms[0] if ms else None
 
     def gc(self, keep: int = 3):
-        """Drop all but the newest ``keep`` manifests + unreferenced versions."""
+        """Drop all but the newest ``keep`` manifests + unreferenced
+        versions (the committer's retention policy calls this after every
+        completeOp).  Handles sharded entries (every referenced shard stays
+        live) and skips files it cannot parse — e.g. tempfiles left by an
+        incarnation that crashed mid-write — rather than aborting."""
+        keep = max(1, keep)
         ms = self.manifests_desc()
         keep_ms, drop_ms = ms[:keep], ms[keep:]
-        live = {(n, o["version"]) for m in keep_ms
-                for n, o in m["objects"].items()}
+        live = set()
+        for m in keep_ms:
+            for n, o in m["objects"].items():
+                if o.get("sharded"):
+                    live.update((s["name"], s["version"])
+                                for s in o["shards"])
+                else:
+                    live.add((n, o["version"]))
         for m in drop_ms:
-            os.unlink(os.path.join(self.path, f"manifest.{m['seq']}.json"))
+            try:
+                os.unlink(os.path.join(self.path,
+                                       f"manifest.{m['seq']}.json"))
+            except OSError:
+                pass
         for name in os.listdir(self.obj_dir):
             d = os.path.join(self.obj_dir, name)
             for fn in os.listdir(d):
-                ver = int(fn.split(".")[0])
-                if (name, ver) not in live:
-                    os.unlink(os.path.join(d, fn))
+                stem = fn.split(".")[0]
+                if not stem.isdigit():
+                    continue        # tempfile from a crashed write
+                if (name, int(stem)) not in live:
+                    try:
+                        os.unlink(os.path.join(d, fn))
+                    except OSError:
+                        pass

@@ -6,7 +6,9 @@ workers are uninterrupted.  Recovery sources, best first:
 1. **peer staging** — if a surviving peer holds an RStore-staged copy NEWER
    than the pool's manifest (CXL0 cache-to-cache propagation), adopt it;
 2. **pool manifest** — newest manifest whose every object CRC-validates;
-   torn/corrupt shards trigger fallback to the previous manifest.
+   torn/corrupt shards trigger fallback to the previous manifest.  Works
+   for plain AND sharded manifest entries: a sharded object validates only
+   if EVERY shard validates, so a commit torn mid-shard-write is invisible.
 
 ``RecoveryManager.recover`` returns (state_objects, step, source).
 """
@@ -22,6 +24,14 @@ class CrashError(Exception):
     """Raised by fault-injection hooks to simulate a worker loss."""
 
 
+class ColdStartError(RuntimeError):
+    """No recoverable state exists anywhere (empty pool, no peer staging).
+    Subclasses RuntimeError for backward compatibility; resume paths catch
+    THIS and never a broader class, so a real runtime failure during
+    recovery cannot be mistaken for a cold start (which would shadow the
+    pool with a fresh step -1 manifest)."""
+
+
 class RecoveryManager:
     def __init__(self, pool: DSMPool):
         self.pool = pool
@@ -32,8 +42,7 @@ class RecoveryManager:
         for m in self.pool.manifests_desc():
             try:
                 objs = {
-                    name: self.pool.read_object(name, o["version"],
-                                                templates[name])
+                    name: self.pool.read_entry(name, o, templates[name])
                     for name, o in m["objects"].items()}
             except (CorruptObjectError, KeyError):
                 continue            # torn commit: fall back to older manifest
@@ -64,7 +73,7 @@ class RecoveryManager:
                 best_ver = v
                 best_peer = {n: t for n, (_, t) in peer.staging.items()}
         if pool_state is None and best_peer is None:
-            raise RuntimeError("no recoverable state (cold start)")
+            raise ColdStartError("no recoverable state (cold start)")
         if best_peer is not None:
             # staged copies are tagged with the training step (see
             # DurableCommitter.update); newest wins against the manifest

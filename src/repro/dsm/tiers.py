@@ -14,16 +14,26 @@ Per worker, per object:
 
 A background ``flush_async`` thread overlaps rflush I/O with compute; the
 commit barrier (``DurableCommitter``) joins it before completeOp.
+
+Sharded variants (``rflush_sharded`` / ``flush_async_sharded``) partition
+the object's flattened leaves into byte-balanced shards and run one
+LStore/RFlush pipeline per shard on a thread pool — the write path of the
+sharded / sharded-async commit schedules.  ``flush_wait`` joins either
+flavor; ``abort_flushes`` joins-and-discards every outstanding write (used
+on crash recovery so a stale in-flight write can never land AFTER a new
+incarnation started reusing version numbers).
 """
 from __future__ import annotations
 
 import threading
-from typing import Any, Callable, Dict, Optional, Tuple
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
 
-from repro.dsm.pool import DSMPool, PoolObject
+from repro.dsm.pool import (DSMPool, PoolObject, ShardedObject,
+                            partition_leaves)
 
 
 def _to_host(tree):
@@ -42,13 +52,34 @@ class TierManager:
         self.flit_counter: Dict[str, int] = {}
         self._flush_threads: Dict[str, threading.Thread] = {}
         self._flush_results: Dict[str, PoolObject] = {}
+        #   name -> (version, n_leaves, assignment, shard futures)
+        self._sharded_futures: Dict[
+            str, Tuple[int, int, List[List[int]], List[Future]]] = {}
+        self._executor: Optional[ThreadPoolExecutor] = None
         self._lock = threading.Lock()
+
+    def _get_executor(self, n_workers: int) -> ThreadPoolExecutor:
+        """One lazily-created pool of flush pipelines, sized by the first
+        sharded flush (the shard count is constant for a run)."""
+        if self._executor is None:
+            self._executor = ThreadPoolExecutor(
+                max_workers=max(1, n_workers),
+                thread_name_prefix=f"rflush-w{self.worker_id}")
+        return self._executor
 
     # -- CXL0 primitive realizations ----------------------------------------
     def lstore(self, name: str, tree: Any):
-        """Update the volatile HBM tier. Completes immediately."""
+        """Update the volatile HBM tier. Completes immediately.
+
+        The first lstore of a name (fresh worker incarnation, or after a
+        crash wiped the counters) seeds the version counter ABOVE the
+        highest version already on disk: version numbers never repeat
+        across incarnations, so a write can never overwrite a file a
+        retained manifest still references."""
         self.hbm[name] = tree
-        self.versions[name] = self.versions.get(name, 0) + 1
+        if name not in self.versions:
+            self.versions[name] = self.pool.max_version(name)
+        self.versions[name] += 1
 
     def rstore(self, name: str, peer: "TierManager",
                tag: Optional[int] = None):
@@ -74,6 +105,59 @@ class TierManager:
         self.lstore(name, tree)
         return self.rflush(name)
 
+    # -- sharded flush (parallel per-shard RFlush pipelines) -----------------
+    def _shard_submit(self, name: str, n_shards: int,
+                      post_first_shard: Optional[Callable] = None
+                      ) -> Tuple[int, int, List[List[int]], List[Future]]:
+        """Snapshot the object NOW, partition its leaves into byte-balanced
+        shards, and submit one write per shard to the flush pool.  If
+        ``post_first_shard`` is given it runs after the FIRST shard is
+        durable and before the rest are joined — the mid-flush
+        fault-injection point of the scenario runner."""
+        version = self.versions.get(name, 0)
+        leaves = [np.asarray(l) for l in
+                  jax.tree_util.tree_leaves(self.hbm[name])]
+        assignment = partition_leaves([a.nbytes for a in leaves], n_shards)
+        ex = self._get_executor(len(assignment))
+        futs = []
+        for k, idxs in enumerate(assignment):
+            futs.append(ex.submit(self.pool.write_object, f"{name}.s{k}",
+                                  version, [leaves[i] for i in idxs]))
+            if k == 0 and post_first_shard is not None:
+                futs[0].result()
+                post_first_shard()
+        return version, len(leaves), assignment, futs
+
+    def _shard_join(self, name: str, version: int, n_leaves: int,
+                    assignment: List[List[int]],
+                    futs: List[Future]) -> ShardedObject:
+        shards = [f.result() for f in futs]
+        return ShardedObject(name, version,
+                             sum(s.nbytes for s in shards),
+                             n_leaves, shards, assignment)
+
+    def rflush_sharded(self, name: str, n_shards: int,
+                       post_first_shard: Optional[Callable] = None
+                       ) -> ShardedObject:
+        """Blocking sharded durable write: all shards written in parallel,
+        returns once every shard is on storage."""
+        self.flit_counter[name] = self.flit_counter.get(name, 0) + 1
+        try:
+            return self._shard_join(
+                name, *self._shard_submit(name, n_shards, post_first_shard))
+        finally:
+            self.flit_counter[name] -= 1
+
+    def flush_async_sharded(self, name: str, n_shards: int,
+                            post_first_shard: Optional[Callable] = None):
+        """Start a sharded durable write in the background (double-buffered
+        commit path); join via flush_wait.  The FliT counter stays raised
+        until the join, so a concurrent joiner knows the pool copy may be
+        stale."""
+        self.flit_counter[name] = self.flit_counter.get(name, 0) + 1
+        self._sharded_futures[name] = self._shard_submit(
+            name, n_shards, post_first_shard)
+
     # -- async flush (compute/IO overlap) ------------------------------------
     def flush_async(self, name: str):
         """Start a durable write in the background; join via flush_wait.
@@ -93,16 +177,52 @@ class TierManager:
         self._flush_threads[name] = t
         t.start()
 
-    def flush_wait(self, name: str) -> PoolObject:
+    def flush_wait(self, name: str):
+        """Join one outstanding async flush (threaded or sharded); returns
+        the PoolObject / ShardedObject for the manifest."""
+        pending = self._sharded_futures.pop(name, None)
+        if pending is not None:
+            try:
+                return self._shard_join(name, *pending)
+            finally:
+                self.flit_counter[name] -= 1
         t = self._flush_threads.pop(name, None)
         if t is not None:
             t.join()
         with self._lock:
             return self._flush_results.pop(name)
 
+    def abort_flushes(self):
+        """Join-and-discard every outstanding async write.  Called on crash
+        recovery: a stale write must fully land (or fail) BEFORE the next
+        incarnation reuses version numbers, else an old flush could
+        overwrite a new one's file after its manifest committed."""
+        for name, (_, _, _, futs) in list(self._sharded_futures.items()):
+            for f in futs:
+                try:
+                    f.result()
+                except Exception:
+                    pass
+            self.flit_counter[name] -= 1
+        self._sharded_futures.clear()
+        for name, t in list(self._flush_threads.items()):
+            t.join()
+        self._flush_threads.clear()
+        with self._lock:
+            self._flush_results.clear()
+
+    def close(self):
+        """Release the flush thread pool (idempotent; lazily recreated if
+        another sharded flush happens)."""
+        if self._executor is not None:
+            self._executor.shutdown(wait=False)
+            self._executor = None
+
     # -- crash ----------------------------------------------------------------
     def crash(self):
         """f_i: all volatile tiers of this worker vanish."""
+        self.abort_flushes()
+        self.close()
         self.hbm.clear()
         self.staging.clear()
         self.versions.clear()

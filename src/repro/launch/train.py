@@ -9,7 +9,12 @@ scheduler); on a dev box it runs single-process.  Wires together:
 
     python -m repro.launch.train --arch olmo-1b --steps 100 \
         --global-batch 8 --seq 512 --pool /tmp/pool [--mesh-data 4] \
-        [--commit-every 10] [--mode async] [--compress int8]
+        [--commit-every 10] [--mode sharded-async] [--shards 8] \
+        [--retention 5] [--compress int8]
+
+The default commit schedule is ``sharded-async``: per-device state shards
+are flushed on parallel pipelines, double-buffered behind the next step's
+compute, with manifest retention GC (see repro.dsm.flit_runtime).
 """
 from __future__ import annotations
 
@@ -42,7 +47,17 @@ def main():
     ap.add_argument("--seq", type=int, default=512)
     ap.add_argument("--pool", default="/tmp/repro_pool")
     ap.add_argument("--commit-every", type=int, default=10)
-    ap.add_argument("--mode", default="async", choices=["sync", "async"])
+    ap.add_argument("--mode", default="sharded-async",
+                    choices=["sync", "async", "sharded", "sharded-async"])
+    ap.add_argument("--shards", type=int, default=0,
+                    help="shard pipelines per object (0 = auto: one per "
+                         "local device, capped by state size)")
+    ap.add_argument("--retention", type=int, default=5,
+                    help="manifests kept by GC after each commit "
+                         "(0 = unbounded)")
+    ap.add_argument("--resume", action="store_true",
+                    help="recover from the pool before training "
+                         "(restart of a crashed/preempted worker)")
     ap.add_argument("--mesh-data", type=int, default=0,
                     help="data axis size (0 = all devices)")
     ap.add_argument("--mesh-model", type=int, default=1)
@@ -82,14 +97,27 @@ def main():
     pipe = DataPipeline(SyntheticLMSource(cfg.vocab_size),
                         args.global_batch, args.seq)
     pool = DSMPool(args.pool)
+    # --shards 0 -> None: the committer auto-sizes from the actual HBM
+    # state volume at the first sharded flush (one heuristic, one place)
+    n_shards = args.shards or None
     r = run_durable_loop(step, state, pipe, pool, n_steps=args.steps,
                          commit_every=args.commit_every,
                          commit_mode=args.mode,
+                         n_shards=n_shards,
+                         retention=args.retention or None,
+                         resume=args.resume,
                          worker_id=jax.process_index())
+    if r.resumed_from is not None:
+        print(f"resumed from step {r.resumed_from} "
+              f"(source: {r.recoveries[0]})")
+    if not r.losses:        # resume found every step already committed
+        print(f"done: nothing to do; commits in pool up to step "
+              f"{pool.latest_manifest()['step']}")
+        return
     print(f"done: {len(r.losses)} steps, loss {r.losses[0]:.3f} -> "
           f"{r.losses[-1]:.3f}; commits in pool: "
           f"{pool.latest_manifest()['step'] + 1}")
-    comp = np.mean([t.compute_s for t in r.timings])
+    comp = np.mean([t.compute_s for t in r.timings if t.compute_s])
     print(f"mean step {comp*1e3:.1f} ms")
 
 

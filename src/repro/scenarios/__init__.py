@@ -1,0 +1,20 @@
+"""Crash-injection scenario subsystem.
+
+Verifies the durable-linearizability claim at SYSTEM scale: a real worker
+process is killed (``os._exit``) at a configurable point inside the commit
+window — pre-flush, mid-flush (some shards durable, manifest missing), or
+post-completeOp — then restarted; the restarted process must recover to
+SOME completed commit (in fact the newest one) and finish the run with a
+final state bit-identical to an uninterrupted reference run.
+
+* ``repro.scenarios.worker`` — the killable worker process (CLI);
+* ``repro.scenarios.runner`` — orchestrates kill -> inspect -> restart ->
+  compare, one scenario per kill point (CLI + library API).
+
+Import ``run_scenario`` / ``run_suite`` from ``repro.scenarios.runner``
+(submodules are not re-exported here so ``python -m`` entry points stay
+clean).
+"""
+from repro.dsm.flit_runtime import KILL_POINTS
+
+__all__ = ["KILL_POINTS"]

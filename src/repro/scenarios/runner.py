@@ -1,0 +1,185 @@
+"""Scenario runner: kill a worker inside the commit window, restart it,
+and check the durable-linearizability contract end to end.
+
+One scenario (``run_scenario``):
+
+1. **kill phase** — launch ``repro.scenarios.worker`` with a kill point;
+   the process ``os._exit``s mid-commit (exit code KILL_EXIT);
+2. **inspect** — read the pool's manifests: these are the commits that
+   COMPLETED before the death (a manifest exists iff its atomic rename
+   finished);
+3. **restart phase** — relaunch the same worker without the kill; it must
+   recover and report the step it resumed from;
+4. **verdict** — the resumed step must be the NEWEST completed commit (so
+   recovery restored a completed commit, never torn state), and the final
+   params digest must equal an uninterrupted reference run (crash +
+   recover + replay is bit-identical — prefix consistency).
+
+``run_suite`` runs all three kill points; the CLI prints one line per
+scenario:
+
+    PYTHONPATH=src python -m repro.scenarios.runner [--workdir DIR]
+        [--steps 8] [--commit-every 2] [--mode sharded-async] [--shards 4]
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+import tempfile
+from typing import Dict, List, Optional
+
+from repro.dsm.flit_runtime import KILL_POINTS
+from repro.dsm.pool import DSMPool
+from repro.scenarios.worker import KILL_EXIT
+
+
+@dataclasses.dataclass
+class ScenarioResult:
+    kill_point: str
+    killed: bool                         # kill phase exited with KILL_EXIT
+    completed_steps_at_kill: List[int]   # manifest steps durable at death
+    resumed_from: Optional[int]          # step the restart recovered at
+    recovery_source: Optional[str]       # "pool" / "peer-staging"
+    final_digest: Optional[int]
+    reference_digest: Optional[int]
+    detail: str = ""
+
+    @property
+    def recovered_completed_commit(self) -> bool:
+        return (self.resumed_from is not None
+                and self.resumed_from in self.completed_steps_at_kill)
+
+    @property
+    def ok(self) -> bool:
+        return (self.killed
+                and self.recovered_completed_commit
+                and self.resumed_from == max(self.completed_steps_at_kill)
+                and self.final_digest is not None
+                and self.final_digest == self.reference_digest)
+
+
+def _worker_env() -> Dict[str, str]:
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", ".."))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    return env
+
+
+def _run_worker(pool: str, *, steps: int, commit_every: int, mode: str,
+                shards: int, retention: int, kill_point: str, kill_step: int,
+                model: str, timeout: int) -> subprocess.CompletedProcess:
+    cmd = [sys.executable, "-m", "repro.scenarios.worker",
+           "--pool", pool, "--steps", str(steps),
+           "--commit-every", str(commit_every), "--mode", mode,
+           "--shards", str(shards), "--retention", str(retention),
+           "--kill-point", kill_point, "--kill-step", str(kill_step),
+           "--model", model]
+    return subprocess.run(cmd, env=_worker_env(), capture_output=True,
+                          text=True, timeout=timeout)
+
+
+def _result_json(proc: subprocess.CompletedProcess) -> dict:
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def reference_digest(workdir: str, *, steps: int = 8, commit_every: int = 2,
+                     mode: str = "sharded-async", shards: int = 4,
+                     retention: int = 0, model: str = "toy",
+                     timeout: int = 600) -> int:
+    """Digest of an uninterrupted run with the same configuration."""
+    proc = _run_worker(os.path.join(workdir, "pool_reference"), steps=steps,
+                       commit_every=commit_every, mode=mode, shards=shards,
+                       retention=retention, kill_point="none", kill_step=0,
+                       model=model, timeout=timeout)
+    if proc.returncode != 0:
+        raise RuntimeError(f"reference run failed: {proc.stderr[-2000:]}")
+    return _result_json(proc)["digest"]
+
+
+def run_scenario(kill_point: str, workdir: str, *, steps: int = 8,
+                 commit_every: int = 2, mode: str = "sharded-async",
+                 shards: int = 4, retention: int = 0,
+                 kill_step: Optional[int] = None, model: str = "toy",
+                 ref_digest: Optional[int] = None,
+                 timeout: int = 600) -> ScenarioResult:
+    assert kill_point in KILL_POINTS, kill_point
+    if kill_step is None:
+        # the second commit point: at least one real commit precedes the kill
+        kill_step = 2 * commit_every - 1
+    pool = os.path.join(workdir, f"pool_{kill_point}")
+
+    # 1. kill phase
+    p1 = _run_worker(pool, steps=steps, commit_every=commit_every, mode=mode,
+                     shards=shards, retention=retention,
+                     kill_point=kill_point, kill_step=kill_step, model=model,
+                     timeout=timeout)
+    killed = p1.returncode == KILL_EXIT
+    if not killed:
+        return ScenarioResult(kill_point, False, [], None, None, None,
+                              ref_digest,
+                              detail=f"kill phase rc={p1.returncode}: "
+                                     f"{p1.stderr[-1000:]}")
+
+    # 2. what was durably committed at the moment of death?
+    completed = sorted(m["step"] for m in DSMPool(pool).manifests_desc())
+
+    # 3. restart phase: same worker, no kill, resume from the pool
+    p2 = _run_worker(pool, steps=steps, commit_every=commit_every, mode=mode,
+                     shards=shards, retention=retention, kill_point="none",
+                     kill_step=0, model=model, timeout=timeout)
+    if p2.returncode != 0:
+        return ScenarioResult(kill_point, True, completed, None, None, None,
+                              ref_digest,
+                              detail=f"restart rc={p2.returncode}: "
+                                     f"{p2.stderr[-1000:]}")
+    res = _result_json(p2)
+
+    # 4. verdict inputs
+    if ref_digest is None:
+        ref_digest = reference_digest(
+            workdir, steps=steps, commit_every=commit_every, mode=mode,
+            shards=shards, retention=retention, model=model, timeout=timeout)
+    return ScenarioResult(
+        kill_point, True, completed, res["resumed_from"],
+        (res["recoveries"] or [None])[0], res["digest"], ref_digest)
+
+
+def run_suite(workdir: Optional[str] = None, **kwargs) -> List[ScenarioResult]:
+    """All three kill points, sharing one reference run."""
+    workdir = workdir or tempfile.mkdtemp(prefix="scenarios_")
+    ref = reference_digest(workdir, **{k: v for k, v in kwargs.items()
+                                       if k != "kill_step"})
+    return [run_scenario(p, workdir, ref_digest=ref, **kwargs)
+            for p in KILL_POINTS]
+
+
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workdir", default=None)
+    ap.add_argument("--steps", type=int, default=8)
+    ap.add_argument("--commit-every", type=int, default=2)
+    ap.add_argument("--mode", default="sharded-async")
+    ap.add_argument("--shards", type=int, default=4)
+    ap.add_argument("--model", default="toy", choices=["toy", "smoke"])
+    args = ap.parse_args(argv)
+    results = run_suite(args.workdir, steps=args.steps,
+                        commit_every=args.commit_every, mode=args.mode,
+                        shards=args.shards, model=args.model)
+    failed = 0
+    for r in results:
+        status = "OK" if r.ok else "FAIL"
+        failed += not r.ok
+        print(f"scenario,{r.kill_point},{status},"
+              f"completed={r.completed_steps_at_kill},"
+              f"resumed={r.resumed_from},source={r.recovery_source},"
+              f"digest_match={r.final_digest == r.reference_digest}"
+              + (f",detail={r.detail}" if r.detail else ""))
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,158 @@
+"""The killable scenario worker: one training process over a DSM pool.
+
+Runs the durable training loop and, when ``--kill-point`` is set, dies with
+``os._exit(KILL_EXIT)`` the first time the committer's fault hook fires at
+that point on or after ``--kill-step`` — a REAL process death in the middle
+of the commit window, not a simulated exception: background shard writes
+are cut off wherever they happen to be, exactly the partial-crash model.
+
+On restart (same command, ``--kill-point none``) the loop runs with
+``resume=True``: it recovers from the pool and continues; the JSON result
+on stdout reports the recovered step + source and a CRC digest of the final
+params so the runner can compare against an uninterrupted reference run.
+
+By default the worker trains a small deterministic toy state (fast enough
+for CI); ``--model smoke`` trains a real smoke-config transformer through
+the identical code path for heavier manual runs:
+
+    PYTHONPATH=src python -m repro.scenarios.worker --pool /tmp/p \
+        --kill-point mid_flush --kill-step 3
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import zlib
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.data.pipeline import DataPipeline, SyntheticLMSource
+from repro.dsm.flit_runtime import COMMIT_MODES, KILL_POINTS
+from repro.dsm.pool import DSMPool
+from repro.train.loop import run_durable_loop
+from repro.train.state import TrainState, init_train_state
+
+#: exit code of an injected kill (distinguishes it from real failures)
+KILL_EXIT = 17
+
+
+def make_toy_state(dim: int = 64, n_tensors: int = 6,
+                   seed: int = 0) -> TrainState:
+    """A small multi-tensor state pytree — enough leaves that the sharded
+    write path genuinely partitions work across pipelines."""
+    key = jax.random.PRNGKey(seed)
+    params = {}
+    for t in range(n_tensors):
+        key, k = jax.random.split(key)
+        params[f"w{t}"] = jax.random.normal(k, (dim, dim), jnp.float32)
+    return init_train_state(params, key)
+
+
+def make_toy_step():
+    """Deterministic pseudo-training step (no model build, fast on CPU):
+    a pure function of (state, batch), so crash + recover + replay must be
+    bit-identical to an uninterrupted run."""
+
+    def step(state: TrainState, batch):
+        x = jnp.mean(batch["tokens"].astype(jnp.float32)) / 1000.0
+        grads = jax.tree_util.tree_map(lambda p: 0.01 * p + x, state.params)
+        params = jax.tree_util.tree_map(lambda p, g: p - 0.1 * g,
+                                        state.params, grads)
+        opt = state.opt._replace(
+            step=state.opt.step + 1,
+            mu=jax.tree_util.tree_map(lambda m, g: 0.9 * m + 0.1 * g,
+                                      state.opt.mu, grads),
+            nu=jax.tree_util.tree_map(lambda v, g: 0.95 * v + 0.05 * g * g,
+                                      state.opt.nu, grads))
+        loss = sum(jnp.mean(jnp.square(l))
+                   for l in jax.tree_util.tree_leaves(params))
+        return TrainState(params, opt, state.rng), {"loss": loss}
+
+    return jax.jit(step)
+
+
+def make_smoke_model():
+    """The real-model variant (heavier; manual runs): smoke-config olmo."""
+    from repro.configs import get_smoke_config
+    from repro.models.registry import build
+    from repro.train.step import make_train_step
+    cfg = get_smoke_config("olmo-1b")
+    bundle = build(cfg)
+    key = jax.random.PRNGKey(0)
+    state = init_train_state(bundle.init_params(key), key)
+    return jax.jit(make_train_step(bundle)), state, cfg.vocab_size
+
+
+def state_digest(state: TrainState) -> int:
+    """CRC32 over the final params — the cross-process equality check."""
+    crc = 0
+    for l in jax.tree_util.tree_leaves(state.params):
+        a = np.ascontiguousarray(np.asarray(l, np.float32))
+        crc = zlib.crc32(a.tobytes(), crc)
+    return crc
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pool", required=True)
+    ap.add_argument("--steps", type=int, default=8)
+    ap.add_argument("--commit-every", type=int, default=2)
+    ap.add_argument("--mode", default="sharded-async", choices=COMMIT_MODES)
+    ap.add_argument("--shards", type=int, default=4)
+    ap.add_argument("--retention", type=int, default=0,
+                    help="manifests kept by GC (0 = unbounded)")
+    ap.add_argument("--kill-point", default="none",
+                    choices=("none",) + KILL_POINTS)
+    ap.add_argument("--kill-step", type=int, default=3,
+                    help="fire at the first hook of --kill-point whose "
+                         "commit step is >= this")
+    ap.add_argument("--model", default="toy", choices=["toy", "smoke"])
+    ap.add_argument("--dim", type=int, default=64)
+    ap.add_argument("--result", default="", help="also write the result "
+                                                 "JSON to this path")
+    args = ap.parse_args(argv)
+
+    hook = None
+    if args.kill_point != "none":
+        def hook(point, step):
+            if point == args.kill_point and step >= args.kill_step:
+                sys.stderr.write(f"KILL {point} step={step}\n")
+                sys.stderr.flush()
+                os._exit(KILL_EXIT)
+
+    if args.model == "smoke":
+        step_fn, state, vocab = make_smoke_model()
+    else:
+        step_fn, state, vocab = make_toy_step(), make_toy_state(args.dim), 1024
+    pipe = DataPipeline(SyntheticLMSource(vocab), 4, 32)
+    pool = DSMPool(args.pool)
+
+    r = run_durable_loop(step_fn, state, pipe, pool, n_steps=args.steps,
+                         commit_every=args.commit_every,
+                         commit_mode=args.mode, n_shards=args.shards,
+                         retention=args.retention or None,
+                         fault_hook=hook, resume=True)
+
+    result = {
+        "ok": True,
+        "completed_losses": len(r.losses),
+        "resumed_from": r.resumed_from,
+        "recoveries": r.recoveries,
+        "digest": state_digest(r.state),
+        "final_manifest_step": pool.latest_manifest()["step"],
+        "pipeline_step": r.pipeline_state.step,
+    }
+    line = json.dumps(result)
+    if args.result:
+        with open(args.result, "w") as f:
+            f.write(line)
+    print(line)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

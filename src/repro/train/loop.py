@@ -12,6 +12,10 @@ per worker (launch/train.py).  The loop guarantees:
   newest CRC-valid manifest;
 * the data pipeline resumes exactly where the recovered step left off
   (PipelineState is one of the committed objects) — no data loss or dupes.
+
+The default commit schedule is ``sharded-async``: per-device byte-balanced
+state shards flushed on parallel pipelines, double-buffered one commit
+behind compute (see repro.dsm.flit_runtime for all four schedules).
 """
 from __future__ import annotations
 
@@ -26,7 +30,7 @@ import numpy as np
 from repro.data.pipeline import DataPipeline, PipelineState
 from repro.dsm.flit_runtime import DurableCommitter
 from repro.dsm.pool import DSMPool
-from repro.dsm.recovery import CrashError, RecoveryManager
+from repro.dsm.recovery import CrashError, ColdStartError, RecoveryManager
 from repro.dsm.tiers import TierManager
 from repro.train.state import TrainState
 
@@ -49,6 +53,8 @@ class LoopResult:
     timings: List[StepTiming]
     recoveries: List[str]       # recovery sources used ("pool"/"peer-staging")
     crashes: int
+    resumed_from: Optional[int] = None    # step recovered at startup
+    #                                       (resume=True), None if cold
 
 
 def _state_objects(state: TrainState, pipe_state: PipelineState):
@@ -82,23 +88,35 @@ def run_durable_loop(
     *,
     n_steps: int,
     commit_every: int = 5,
-    commit_mode: str = "sync",
+    commit_mode: str = "sharded-async",   # the production default schedule
+    n_shards: Optional[int] = None,      # sharded modes; None = per-device
+    retention: Optional[int] = None,     # keep newest k manifests (GC)
     worker_id: int = 0,
     peer_tiers: Optional[TierManager] = None,
     replicate: bool = False,
     crash_at: Optional[Dict[int, str]] = None,   # step -> "before_commit" |
     #                                              "after_commit" | "mid_write"
+    fault_hook: Optional[Callable] = None,  # (point, step) inside the commit
+    #                                         window — see flit_runtime
+    resume: bool = False,   # recover from the pool before training (process
+    #                         restart); skips the initial step -1 commit
     to_device: Callable = jnp.asarray,
 ) -> LoopResult:
     """Run ``n_steps`` with durable commits every ``commit_every`` steps.
 
     ``crash_at`` injects worker crashes at precise points (tests use this to
     prove prefix-consistency); after a crash the loop RECOVERS and continues
-    — emulating the scheduler restarting the worker.
+    — emulating the scheduler restarting the worker.  ``fault_hook`` is the
+    harder variant: it fires INSIDE the commit window (pre-flush, mid-flush,
+    post-completeOp) so the scenario runner can kill the whole process
+    there; the restarted process passes ``resume=True`` to recover from the
+    pool instead of re-committing a fresh step -1 (which would shadow newer
+    manifests).
     """
     tiers = TierManager(pool, worker_id)
     committer = DurableCommitter(
-        tiers, mode=commit_mode,
+        tiers, mode=commit_mode, n_shards=n_shards, retention=retention,
+        fault_hook=fault_hook,
         replicate_to=peer_tiers if replicate else None)
     recovery = RecoveryManager(pool)
     templates = _state_objects(init_state, pipeline.state)
@@ -108,14 +126,28 @@ def run_durable_loop(
     timings: List[StepTiming] = []
     recoveries: List[str] = []
     crashes = 0
+    resumed_from: Optional[int] = None
     crash_at = dict(crash_at or {})
 
-    # initial durable state (step -1): a cold restart is always possible
-    committer.update(_state_objects(state, pipeline.state), step=-1)
-    committer.commit(-1)
-    committer.drain()
-
     i = 0
+    if resume:
+        try:
+            objs, rec_step, source = recovery.recover(
+                templates, (peer_tiers,) if peer_tiers is not None else ())
+            state, pipe_state = _objects_to_state(objs, state)
+            pipeline.state = pipe_state
+            recoveries.append(source)
+            resumed_from = rec_step
+            i = rec_step + 1
+        except ColdStartError:
+            pass                # cold pool: fall through to the fresh path
+            # (any OTHER failure propagates — committing a fresh step -1
+            #  over an existing history would shadow every newer manifest)
+    if resumed_from is None:
+        # initial durable state (step -1): a cold restart is always possible
+        committer.update(_state_objects(state, pipeline.state), step=-1)
+        committer.commit(-1)
+        committer.drain()
     while i < n_steps:
         plan = crash_at.get(i)
         try:
@@ -151,8 +183,8 @@ def run_durable_loop(
         except CrashError:
             crashes += 1
             crash_at.pop(i, None)
-            tiers.crash()                      # f_i: volatile tiers vanish
-            committer._pending = None
+            committer.abort_pending()     # join+discard in-flight flushes
+            tiers.crash()                 # f_i: volatile tiers vanish
             # --- recovery (new worker incarnation) -------------------------
             peers = (peer_tiers,) if peer_tiers is not None else ()
             objs, rec_step, source = recovery.recover(templates, peers)
@@ -161,6 +193,12 @@ def run_durable_loop(
             recoveries.append(source)
             i = rec_step + 1
 
-    committer.drain()
+    td = time.perf_counter()
+    drained = committer.drain()
+    if drained is not None:
+        # the tail flush join is real blocking commit time (it overlaps no
+        # compute) — charge it so schedule comparisons stay honest
+        timings.append(StepTiming(n_steps, 0.0, time.perf_counter() - td))
+    tiers.close()
     return LoopResult(state, pipeline.state, losses, timings, recoveries,
-                      crashes)
+                      crashes, resumed_from)

@@ -11,6 +11,11 @@ metrics)`` with:
 
 ``make_serve_steps`` returns (prefill_step, decode_step).
 
+Checkpoint-commit planning (how many per-device shard pipelines flush the
+state this step produces) lives with the commit scheduler:
+``repro.dsm.flit_runtime.auto_shard_count`` sizes pipelines from the
+actual HBM state volume; callers pass ``n_shards=None`` to get it.
+
 All functions are pure; shardings are applied by the caller via
 ``jax.jit(..., in_shardings=..., out_shardings=...)`` (see launch/dryrun).
 """

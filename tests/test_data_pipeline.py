@@ -2,6 +2,7 @@
 straggler-aware rebalancing (property-based)."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis", reason="property-based tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.data.pipeline import (

@@ -69,11 +69,14 @@ def test_uninterrupted_vs_crashy_run_identical(setup, tmp_path):
 
 
 def test_committed_step_survives(setup, tmp_path):
-    """Crash right AFTER a commit: recovery resumes from that very step."""
+    """Crash right AFTER a commit: recovery resumes from that very step.
+    (sync schedule — the async schedules are deliberately one commit
+    behind; their semantics are covered by test_sharded_commit.py.)"""
     cfg, bundle, state, step = setup
     r = run_durable_loop(
         step, state, _pipeline(cfg), DSMPool(str(tmp_path / "p")),
-        n_steps=6, commit_every=2, crash_at={3: "after_commit"})
+        n_steps=6, commit_every=2, commit_mode="sync",
+        crash_at={3: "after_commit"})
     assert r.crashes == 1
     # step 3 committed ((3+1) % 2 == 0) then crashed; no replay of <=3
     # total loss entries: 6 steps + 0 replays (crash after commit of 3)
@@ -101,17 +104,19 @@ def test_crc_bitrot_falls_back(setup, tmp_path):
     cfg, bundle, state, step = setup
     pool = DSMPool(str(tmp_path / "p"))
     run_durable_loop(step, state, _pipeline(cfg), pool, n_steps=4,
-                     commit_every=2)
-    # corrupt the newest params object
+                     commit_every=2, n_shards=4)
+    # corrupt the newest params object (first shard of the sharded entry)
     newest = pool.latest_manifest()
     obj = newest["objects"]["params"]
-    path = pool._obj_path("params", obj["version"]) + ".npz"
+    assert obj["sharded"]
+    sh = obj["shards"][0]
+    path = pool._obj_path(sh["name"], sh["version"]) + ".npz"
     with open(path, "r+b") as f:
         f.seek(100)
         f.write(b"\xde\xad\xbe\xef")
     with pytest.raises(CorruptObjectError):
-        pool.read_object("params", obj["version"],
-                         jax.tree_util.tree_map(lambda x: x, state.params))
+        pool.read_entry("params", obj,
+                        jax.tree_util.tree_map(lambda x: x, state.params))
     # recovery skips the corrupt manifest and lands on the previous one
     templates = {
         "params": state.params, "opt_mu": state.opt.mu,

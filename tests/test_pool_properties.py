@@ -3,6 +3,7 @@ manifest monotonicity, GC safety)."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
+pytest.importorskip("hypothesis", reason="property-based tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.dsm.pool import CorruptObjectError, DSMPool

@@ -1,0 +1,98 @@
+"""Recovery fallback path (dsm/recovery.py): a corrupt shard — payload OR
+CRC sidecar — must fail validation of the WHOLE object and push recovery
+back to the previous manifest; recovery never returns torn state."""
+import json
+import os
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.data.pipeline import DataPipeline, SyntheticLMSource
+from repro.dsm.pool import CorruptObjectError, DSMPool
+from repro.dsm.recovery import RecoveryManager
+from repro.scenarios.worker import make_toy_state, make_toy_step
+from repro.train.loop import run_durable_loop
+
+
+@pytest.fixture()
+def committed_pool(tmp_path):
+    """A pool with several sharded-async commits + the recovery templates."""
+    pool = DSMPool(str(tmp_path / "pool"))
+    state = make_toy_state()
+    run_durable_loop(make_toy_step(), state,
+                     DataPipeline(SyntheticLMSource(1024), 4, 32), pool,
+                     n_steps=8, commit_every=2, n_shards=4)
+    templates = {"params": state.params, "opt_mu": state.opt.mu,
+                 "opt_nu": state.opt.nu,
+                 "counters": {"opt_step": state.opt.step, "rng": state.rng},
+                 "pipeline": {"seed": np.int64(0), "step": np.int64(0)}}
+    return pool, templates
+
+
+def _newest_params_shard(pool):
+    newest = pool.latest_manifest()
+    entry = newest["objects"]["params"]
+    assert entry["sharded"]
+    return newest, entry, entry["shards"][1]
+
+
+def test_corrupt_crc_sidecar_falls_back(committed_pool):
+    """Bit-rot in the CRC SIDECAR (not the payload) must also invalidate
+    the shard — the sidecar is part of the durable write protocol."""
+    pool, templates = committed_pool
+    newest, entry, shard = _newest_params_shard(pool)
+    sidecar = pool._obj_path(shard["name"], shard["version"]) + ".crc"
+    with open(sidecar) as f:
+        meta = json.load(f)
+    meta["crc"] ^= 0xDEADBEEF
+    with open(sidecar, "w") as f:
+        json.dump(meta, f)
+    with pytest.raises(CorruptObjectError):
+        pool.read_entry("params", entry, templates["params"])
+    objs, rec_step, src = RecoveryManager(pool).recover(templates)
+    assert src == "pool"
+    assert rec_step < newest["step"]
+
+
+def test_missing_shard_file_falls_back(committed_pool):
+    """A shard file that vanished (torn write, disk loss) is a torn commit:
+    recovery must land on the previous manifest."""
+    pool, templates = committed_pool
+    newest, entry, shard = _newest_params_shard(pool)
+    os.unlink(pool._obj_path(shard["name"], shard["version"]) + ".npz")
+    with pytest.raises(CorruptObjectError):
+        pool.read_entry("params", entry, templates["params"])
+    objs, rec_step, src = RecoveryManager(pool).recover(templates)
+    assert src == "pool"
+    assert rec_step == newest["step"] - 2       # the previous commit point
+
+
+def test_unreadable_sidecar_falls_back(committed_pool):
+    pool, templates = committed_pool
+    newest, entry, shard = _newest_params_shard(pool)
+    sidecar = pool._obj_path(shard["name"], shard["version"]) + ".crc"
+    with open(sidecar, "w") as f:
+        f.write("{not json")
+    objs, rec_step, src = RecoveryManager(pool).recover(templates)
+    assert src == "pool"
+    assert rec_step < newest["step"]
+
+
+def test_all_manifests_corrupt_is_cold_start(tmp_path):
+    pool = DSMPool(str(tmp_path / "pool"))
+    state = make_toy_state()
+    run_durable_loop(make_toy_step(), state,
+                     DataPipeline(SyntheticLMSource(1024), 4, 32), pool,
+                     n_steps=2, commit_every=1, n_shards=2)
+    templates = {"params": state.params, "opt_mu": state.opt.mu,
+                 "opt_nu": state.opt.nu,
+                 "counters": {"opt_step": state.opt.step, "rng": state.rng},
+                 "pipeline": {"seed": np.int64(0), "step": np.int64(0)}}
+    for name in os.listdir(pool.obj_dir):
+        d = os.path.join(pool.obj_dir, name)
+        for fn in os.listdir(d):
+            if fn.endswith(".npz"):
+                os.unlink(os.path.join(d, fn))
+    with pytest.raises(RuntimeError):
+        RecoveryManager(pool).recover(templates)

@@ -1,0 +1,180 @@
+"""Sharded + sharded-async commit schedules: partition properties, shard
+round-trips, schedule equivalence, retention GC, and commit-window fault
+hooks (the in-process complement of the process-kill scenario suite)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.data.pipeline import DataPipeline, SyntheticLMSource
+from repro.dsm.flit_runtime import COMMIT_MODES, DurableCommitter
+from repro.dsm.pool import DSMPool, partition_leaves
+from repro.dsm.recovery import CrashError, RecoveryManager
+from repro.dsm.tiers import TierManager
+from repro.scenarios.worker import make_toy_state, make_toy_step, state_digest
+from repro.train.loop import run_durable_loop
+
+
+def _pipeline():
+    return DataPipeline(SyntheticLMSource(1024), 4, 32)
+
+
+# -- partition_leaves ---------------------------------------------------------
+
+def test_partition_covers_every_leaf_once():
+    sizes = [7, 1, 100, 42, 3, 3, 58, 9]
+    groups = partition_leaves(sizes, 3)
+    flat = sorted(i for g in groups for i in g)
+    assert flat == list(range(len(sizes)))
+    assert all(g for g in groups)
+
+
+def test_partition_balances_bytes():
+    sizes = [100] * 8
+    groups = partition_leaves(sizes, 4)
+    loads = [sum(sizes[i] for i in g) for g in groups]
+    assert max(loads) == min(loads) == 200
+
+
+def test_partition_clamps_to_leaf_count():
+    groups = partition_leaves([5, 5], 16)
+    assert len(groups) == 2
+
+
+# -- sharded write / read round-trip -----------------------------------------
+
+def test_sharded_roundtrip_mixed_dtypes(tmp_path):
+    pool = DSMPool(str(tmp_path / "p"))
+    tiers = TierManager(pool, worker_id=0)
+    tree = {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "b": jnp.ones((5,), jnp.bfloat16),
+            "c": {"d": jnp.arange(7, dtype=jnp.int32)}}
+    tiers.lstore("obj", tree)
+    obj = tiers.rflush_sharded("obj", 2)
+    assert len(obj.shards) == 2
+    seq = pool.commit_manifest(0, {"obj": obj})
+    entry = pool.latest_manifest()["objects"]["obj"]
+    assert entry["sharded"] and entry["nbytes"] == obj.nbytes
+    back = pool.read_entry("obj", entry, tree)
+    for orig, got in zip(jax.tree_util.tree_leaves(tree),
+                         jax.tree_util.tree_leaves(back)):
+        assert orig.dtype == got.dtype
+        assert np.array_equal(np.asarray(orig, np.float32),
+                              np.asarray(got, np.float32))
+
+
+# -- schedule equivalence -----------------------------------------------------
+
+@pytest.mark.parametrize("mode", COMMIT_MODES)
+def test_all_schedules_same_durable_history(mode, tmp_path):
+    """Every schedule must commit the same final step and produce the same
+    final state (the schedules trade latency, never correctness)."""
+    pool = DSMPool(str(tmp_path / mode))
+    r = run_durable_loop(make_toy_step(), make_toy_state(), _pipeline(),
+                         pool, n_steps=8, commit_every=2, commit_mode=mode,
+                         n_shards=4)
+    assert pool.latest_manifest()["step"] == 7      # drain flushed the tail
+    r_ref = run_durable_loop(make_toy_step(), make_toy_state(), _pipeline(),
+                             DSMPool(str(tmp_path / f"{mode}_ref")),
+                             n_steps=8, commit_every=2, commit_mode="sync")
+    assert state_digest(r.state) == state_digest(r_ref.state)
+
+
+def test_sharded_async_crash_recovery_identical(tmp_path):
+    r_clean = run_durable_loop(make_toy_step(), make_toy_state(),
+                               _pipeline(), DSMPool(str(tmp_path / "clean")),
+                               n_steps=8, commit_every=2, n_shards=4)
+    r_crashy = run_durable_loop(
+        make_toy_step(), make_toy_state(), _pipeline(),
+        DSMPool(str(tmp_path / "crashy")), n_steps=8, commit_every=2,
+        n_shards=4, crash_at={3: "before_commit", 5: "after_commit"})
+    assert r_crashy.crashes == 2
+    assert state_digest(r_clean.state) == state_digest(r_crashy.state)
+
+
+def test_resume_skips_initial_commit(tmp_path):
+    """A restarted worker (resume=True) recovers instead of re-committing a
+    fresh step -1 manifest that would shadow newer commits."""
+    pool = DSMPool(str(tmp_path / "p"))
+    run_durable_loop(make_toy_step(), make_toy_state(), _pipeline(), pool,
+                     n_steps=4, commit_every=2, n_shards=2)
+    assert pool.latest_manifest()["step"] == 3
+    r = run_durable_loop(make_toy_step(), make_toy_state(), _pipeline(),
+                         pool, n_steps=8, commit_every=2, n_shards=2,
+                         resume=True)
+    assert r.resumed_from == 3
+    assert r.recoveries == ["pool"]
+    assert pool.latest_manifest()["step"] == 7
+    r_ref = run_durable_loop(make_toy_step(), make_toy_state(), _pipeline(),
+                             DSMPool(str(tmp_path / "ref")), n_steps=8,
+                             commit_every=2)
+    assert state_digest(r.state) == state_digest(r_ref.state)
+
+
+# -- retention GC -------------------------------------------------------------
+
+def test_retention_bounds_manifests_and_versions(tmp_path):
+    pool = DSMPool(str(tmp_path / "p"))
+    run_durable_loop(make_toy_step(), make_toy_state(), _pipeline(), pool,
+                     n_steps=12, commit_every=2, n_shards=4, retention=3)
+    ms = pool.manifests_desc()
+    assert len(ms) == 3
+    # every retained manifest still fully recovers
+    state = make_toy_state()
+    templates = {"params": state.params, "opt_mu": state.opt.mu,
+                 "opt_nu": state.opt.nu,
+                 "counters": {"opt_step": state.opt.step, "rng": state.rng},
+                 "pipeline": {"seed": np.int64(0), "step": np.int64(0)}}
+    objs, rec_step, src = RecoveryManager(pool).recover(templates)
+    assert rec_step == 11
+    # no orphaned shard versions survive GC
+    import os
+    live = set()
+    for m in ms:
+        for n, o in m["objects"].items():
+            if o.get("sharded"):
+                live.update((s["name"], s["version"]) for s in o["shards"])
+            else:
+                live.add((n, o["version"]))
+    for name in os.listdir(pool.obj_dir):
+        for fn in os.listdir(os.path.join(pool.obj_dir, name)):
+            stem = fn.split(".")[0]
+            if stem.isdigit():
+                assert (name, int(stem)) in live
+
+
+# -- commit-window fault hooks ------------------------------------------------
+
+@pytest.mark.parametrize("point", ["pre_flush", "mid_flush"])
+def test_fault_hook_before_completeop_leaves_no_manifest(point, tmp_path):
+    """A crash at pre-flush or mid-flush (some shards durable) must leave
+    the manifest history untouched — the torn write is invisible."""
+    pool = DSMPool(str(tmp_path / "p"))
+    tiers = TierManager(pool, worker_id=0)
+
+    def hook(p, step):
+        if p == point and step >= 0:
+            raise CrashError(f"injected at {p}")
+
+    committer = DurableCommitter(tiers, mode="sharded", n_shards=2,
+                                 fault_hook=hook)
+    committer.update({"obj": {"a": jnp.arange(8.0)}})
+    with pytest.raises(CrashError):
+        committer.commit(0)
+    assert pool.latest_manifest() is None
+
+
+def test_fault_hook_post_completeop_commit_survives(tmp_path):
+    pool = DSMPool(str(tmp_path / "p"))
+    tiers = TierManager(pool, worker_id=0)
+
+    def hook(p, step):
+        if p == "post_completeOp":
+            raise CrashError("injected after completeOp")
+
+    committer = DurableCommitter(tiers, mode="sharded", n_shards=2,
+                                 fault_hook=hook)
+    committer.update({"obj": {"a": jnp.arange(8.0)}})
+    with pytest.raises(CrashError):
+        committer.commit(0)
+    assert pool.latest_manifest()["step"] == 0      # the rename won
