@@ -1,0 +1,128 @@
+"""Serving benchmark: static vs continuous batching on mixed-length traces.
+
+The workload is the one the serving refactor exists for: requests with a
+common prompt length but a WIDE mix of decode budgets.  Static batching
+decodes every batch until its longest sequence finishes (short requests
+ride along as dead lanes); continuous batching frees a slot the tick its
+sequence completes and refills it from the queue.
+
+Measured (CPU smoke config, compile excluded via warmup):
+
+* ``serve_tokens_per_s,<mode>`` — end-to-end emitted-token throughput;
+* ``serve_decode_ticks,<mode>`` — decode steps taken (the batch-occupancy
+  win, hardware-independent);
+* ``serve_speedup`` — continuous over static tokens/s (acceptance floor
+  1.3x on the default config);
+* ``serve_commit_overhead_frac`` — wall-time cost of durable session
+  commits (FliT path, sharded-async schedule, every 4 ticks) relative to
+  stateless continuous serving.  I/O-bound on CPU smoke configs; for
+  RELATIVE comparison only.
+
+Also dumps machine-readable results to ``BENCH_serve.json`` (cwd).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import time
+
+from repro.serve.engine import build_serve_engine
+from repro.serve.trace import synthetic_trace, trace_t_max
+
+N_REQUESTS = 20
+N_SLOTS = 4
+PROMPT_LEN = 32
+NEW_TOKENS = (4, 8, 16, 32, 64)
+COMMIT_EVERY = 4
+
+
+def _trace(vocab: int):
+    return synthetic_trace(N_REQUESTS, prompt_lens=(PROMPT_LEN,),
+                           new_tokens=NEW_TOKENS, vocab_size=vocab)
+
+
+def _timed_run(engine, trace, mode: str):
+    t0 = time.perf_counter()
+    res = (engine.run(trace) if mode == "continuous"
+           else engine.run_static(trace))
+    return res, time.perf_counter() - t0
+
+
+def main():
+    t_max = trace_t_max(_trace(2))
+    results = {}
+
+    # -- static baseline ----------------------------------------------------
+    eng, cfg = build_serve_engine("olmo-1b", smoke=True, n_slots=N_SLOTS,
+                                  t_max=t_max)
+    trace = _trace(cfg.vocab_size)
+    eng.run_static(trace[:N_SLOTS])          # compile prefill+decode shapes
+    res_s, dt_s = _timed_run(eng, trace, "static")
+    results["static"] = {"tokens_per_s": res_s.emitted_tokens / dt_s,
+                         "decode_ticks": res_s.decode_ticks,
+                         "wall_s": dt_s,
+                         "emitted_tokens": res_s.emitted_tokens}
+
+    # -- continuous ---------------------------------------------------------
+    eng2, _ = build_serve_engine("olmo-1b", smoke=True, n_slots=N_SLOTS,
+                                 t_max=t_max)
+    eng2.warmup([PROMPT_LEN])
+    res_c, dt_c = _timed_run(eng2, trace, "continuous")
+    results["continuous"] = {"tokens_per_s": res_c.emitted_tokens / dt_c,
+                             "decode_ticks": res_c.decode_ticks,
+                             "wall_s": dt_c,
+                             "emitted_tokens": res_c.emitted_tokens}
+    assert res_c.outputs == res_s.outputs, \
+        "continuous and static batching must emit identical tokens"
+
+    # -- continuous + durable session commits -------------------------------
+    tmp = tempfile.mkdtemp(prefix="bench_serve_")
+    try:
+        eng3, _ = build_serve_engine(
+            "olmo-1b", smoke=True, n_slots=N_SLOTS, t_max=t_max,
+            pool_path=os.path.join(tmp, "pool"),
+            commit_every=COMMIT_EVERY, commit_mode="sharded-async")
+        eng3.warmup([PROMPT_LEN])
+        res_d, dt_d = _timed_run(eng3, trace, "continuous")
+        eng3.close()
+        results["durable"] = {"tokens_per_s": res_d.emitted_tokens / dt_d,
+                              "wall_s": dt_d, "commits": res_d.commits,
+                              "commit_every": COMMIT_EVERY,
+                              "commit_mode": "sharded-async"}
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    speedup = (results["continuous"]["tokens_per_s"]
+               / results["static"]["tokens_per_s"])
+    overhead = dt_d / dt_c - 1.0
+    results["speedup_continuous_over_static"] = speedup
+    results["commit_overhead_frac"] = overhead
+    results["config"] = {"arch": "olmo-1b smoke", "n_requests": N_REQUESTS,
+                         "n_slots": N_SLOTS, "prompt_len": PROMPT_LEN,
+                         "new_tokens": list(NEW_TOKENS)}
+
+    for mode in ("static", "continuous"):
+        r = results[mode]
+        print(f"serve_tokens_per_s,{r['tokens_per_s']:.0f},mode={mode}")
+        print(f"serve_decode_ticks,{r['decode_ticks']},mode={mode}")
+    print(f"serve_speedup,{speedup:.2f},continuous/static tokens per s "
+          f"(mixed {min(NEW_TOKENS)}-{max(NEW_TOKENS)} tok budgets)")
+    print(f"serve_speedup_ge_1.3,{speedup >= 1.3},acceptance floor")
+    print(f"serve_commit_overhead_frac,{overhead:.3f},durable sessions "
+          f"(commit every {COMMIT_EVERY} ticks) vs stateless")
+
+    with open("BENCH_serve.json", "w") as f:
+        json.dump(results, f, indent=2)
+    print("serve_bench_json,BENCH_serve.json,written")
+    return speedup
+
+
+if __name__ == "__main__":
+    # the acceptance floor is a hard gate when run standalone (CI smoke
+    # job); benchmarks/run.py calls main() without it so one noisy box
+    # doesn't abort the whole benchmark sweep
+    if main() < 1.3:
+        raise SystemExit("FAIL: continuous batching below the 1.3x "
+                         "tokens/s acceptance floor")

@@ -1,70 +1,58 @@
-"""Serve a small model with batched requests: prefill + decode loop.
+"""Serve a small model with continuous batching (and, optionally, durable
+sessions that survive a kill).
 
-Demonstrates the serving path every decode-shape dry-run cell lowers:
-batched prompts -> prefill fills the KV/SSM caches -> token-by-token
-decode with greedy sampling.  ``--arch`` selects any of the ten assigned
-architectures (reduced smoke config of the same family).
+Thin front-end over the ``repro.serve`` subsystem: a slot-based scheduler
+admits requests into fixed decode lanes, a slot-masked decode step
+advances every lane at its own position, finished sequences free their
+lane immediately, and — when ``--pool`` is given — session state commits
+through the FliT durable path so re-running the same command resumes
+every committed session bit-identically.
 
-Run:  PYTHONPATH=src python examples/serve.py --arch jamba-1.5-large-398b
+Run:  PYTHONPATH=src python examples/serve.py --arch olmo-1b
+      PYTHONPATH=src python examples/serve.py --pool /tmp/serve_pool
 """
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs import ARCH_IDS, get_smoke_config
-from repro.models.registry import build
+from repro.configs import get_smoke_config
+from repro.serve.engine import build_serve_engine, servable_archs
+from repro.serve.trace import synthetic_trace, trace_t_max
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="olmo-1b", choices=ARCH_IDS)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--arch", default="olmo-1b", choices=servable_archs())
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--pool", default=None,
+                    help="enable durable sessions in this DSM pool dir")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
-    bundle = build(cfg, dec_pos_len=args.prompt_len + args.new_tokens)
-    key = jax.random.PRNGKey(0)
-    params = bundle.init_params(key)
+    trace = synthetic_trace(args.requests, prompt_lens=(args.prompt_len,),
+                            vocab_size=cfg.vocab_size)
+    engine, _ = build_serve_engine(
+        args.arch, smoke=True, n_slots=args.slots,
+        t_max=trace_t_max(trace), pool_path=args.pool,
+        commit_every=4 if args.pool else 0)
 
-    B, S = args.batch, args.prompt_len
-    t_max = S + args.new_tokens
-    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
-    if cfg.is_encdec:
-        batch["enc_embeds"] = jax.random.normal(
-            key, (B, cfg.encdec.enc_seq, cfg.d_model), jnp.bfloat16)
-    caches = bundle.init_caches(key, B, t_max)
-
-    prefill = jax.jit(lambda p, b, c: bundle.prefill(p, b, c))
-    decode = jax.jit(lambda p, t, s: bundle.decode(p, t, s))
-
+    if args.pool and engine.resume() is not None:
+        print(f"resumed {len(engine.results)} finished sessions "
+              f"from the pool")
     t0 = time.perf_counter()
-    logits, state = prefill(params, batch, caches)
-    jax.block_until_ready(logits)
-    t_prefill = time.perf_counter() - t0
+    res = engine.run(trace)
+    dt = time.perf_counter() - t0
+    engine.close()
 
-    tokens = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-    outputs = [tokens]
-    t0 = time.perf_counter()
-    for _ in range(args.new_tokens - 1):
-        logits, state = decode(params, tokens, state)
-        tokens = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-        outputs.append(tokens)
-    jax.block_until_ready(tokens)
-    t_decode = time.perf_counter() - t0
-
-    out = jnp.concatenate(outputs, axis=1)
-    print(f"arch={args.arch} ({bundle.n_params()/1e6:.1f}M smoke config)")
-    print(f"prefill: {B}x{S} tokens in {t_prefill*1e3:.0f} ms "
-          f"(incl. compile)")
-    print(f"decode:  {args.new_tokens-1} steps x {B} seqs in "
-          f"{t_decode*1e3:.0f} ms "
-          f"({(args.new_tokens-1)*B/t_decode:.0f} tok/s)")
-    print("sampled token ids (first sequence):",
-          [int(t) for t in out[0][:16]])
+    print(f"arch={args.arch} ({engine.bundle.n_params() / 1e6:.1f}M smoke "
+          f"config), {args.slots} slots")
+    print(f"{len(res.outputs)} requests, {res.emitted_tokens} tokens in "
+          f"{dt:.2f}s ({res.emitted_tokens / dt:.0f} tok/s incl. compile); "
+          f"{res.decode_ticks} decode ticks vs "
+          f"{sum(r.max_new_tokens for r in trace)} static-worst-case")
+    rid = trace[0].rid
+    print(f"sampled token ids ({rid}):", res.outputs[rid][:16])
 
 
 if __name__ == "__main__":

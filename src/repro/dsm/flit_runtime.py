@@ -98,7 +98,11 @@ class DurableCommitter:
         self.n_shards = n_shards or None     # None = auto at first commit
         self.retention = retention
         self.fault_hook = fault_hook
-        self._pending: Optional[Tuple[int, List[str]]] = None
+        #: (step, object names, meta) of the in-flight async commit.  meta
+        #: is captured at LAUNCH so the manifest always describes the state
+        #: that was actually flushed — a later commit's meta (e.g. a newer
+        #: serving session table) must never pair with these objects.
+        self._pending: Optional[Tuple[int, List[str], Optional[dict]]] = None
         self.stats: list = []
 
     def _hook(self, point: str, step: int):
@@ -178,7 +182,7 @@ class DurableCommitter:
     def _commit_async(self, step: int, meta, t0) -> Optional[CommitStats]:
         """Join the previous async flushes, completeOp them, then launch
         flushes of the CURRENT state in the background."""
-        st = self._join_pending(meta, t0, "async")
+        st = self._join_pending(t0, "async")
         self._hook("pre_flush", step)
         names = list(self.tiers.hbm)
         for i, name in enumerate(names):
@@ -186,7 +190,7 @@ class DurableCommitter:
             if i == 0:
                 # first object's durable write is in flight, manifest absent
                 self._hook("mid_flush", step)
-        self._pending = (step, names)
+        self._pending = (step, names, meta)
         return st
 
     def _commit_sharded_async(self, step: int, meta, t0
@@ -194,7 +198,7 @@ class DurableCommitter:
         """Double-buffered sharded commit: join + completeOp step s-1's
         shard pipelines (they overlapped compute of step s), then launch
         step s's pipelines and return immediately."""
-        st = self._join_pending(meta, t0, "sharded-async")
+        st = self._join_pending(t0, "sharded-async")
         self._hook("pre_flush", step)
         names = list(self.tiers.hbm)
         first = True
@@ -203,13 +207,13 @@ class DurableCommitter:
                 name, self._resolve_shards(),
                 post_first_shard=self._mid_flush_probe(first, step))
             first = False
-        self._pending = (step, names)
+        self._pending = (step, names, meta)
         return st
 
-    def _join_pending(self, meta, t0, label: str) -> Optional[CommitStats]:
+    def _join_pending(self, t0, label: str) -> Optional[CommitStats]:
         if self._pending is None:
             return None
-        prev_step, names = self._pending
+        prev_step, names, meta = self._pending
         self._pending = None        # cleared FIRST: a failed join must not
         #                             leave already-popped names re-joinable
         written: Dict[str, Any] = {}
@@ -226,10 +230,13 @@ class DurableCommitter:
 
     def drain(self, meta: Optional[dict] = None) -> Optional[CommitStats]:
         """Flush any pending async commit (planned shutdown — the paper's
-        sanctioned GPF use case)."""
+        sanctioned GPF use case).  The manifest carries the meta captured
+        when the pending commit LAUNCHED; ``meta`` is only a fallback for
+        pre-capture callers."""
         if self._pending is not None:
-            st = self._join_pending(meta, time.perf_counter(), "drain")
-            return st
+            if self._pending[2] is None and meta is not None:
+                self._pending = (*self._pending[:2], meta)
+            return self._join_pending(time.perf_counter(), "drain")
         return None
 
     def abort_pending(self):

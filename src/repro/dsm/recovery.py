@@ -14,7 +14,7 @@ workers are uninterrupted.  Recovery sources, best first:
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 from repro.dsm.pool import CorruptObjectError, DSMPool
 from repro.dsm.tiers import TierManager
@@ -48,6 +48,29 @@ class RecoveryManager:
                 continue            # torn commit: fall back to older manifest
             if set(objs) == set(templates):
                 return objs, m["step"], m["seq"]
+        return None
+
+    def recover_latest(self, template_for: Callable[[str, dict], Any]
+                       ) -> Optional[Tuple[Dict[str, Any], dict]]:
+        """Newest fully-CRC-valid manifest for a DYNAMIC object set.
+
+        Unlike ``recover_from_pool`` (fixed training-state objects known up
+        front), the object set here varies per manifest — e.g. one KV-cache
+        object per live serving session.  ``template_for(name, entry)``
+        returns the pytree prototype used to unflatten that object (the
+        manifest's ``meta`` describes the set; the session store derives
+        templates from it).  Returns ``(objects, manifest)`` for the newest
+        manifest whose EVERY object validates, or None — torn commits fall
+        back to older manifests exactly as in the fixed-set path."""
+        for m in self.pool.manifests_desc():
+            try:
+                objs = {
+                    name: self.pool.read_entry(
+                        name, entry, template_for(name, entry))
+                    for name, entry in m["objects"].items()}
+            except (CorruptObjectError, KeyError):
+                continue            # torn commit: fall back to older manifest
+            return objs, m
         return None
 
     def recover(self, templates: Dict[str, Any],

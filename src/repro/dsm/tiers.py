@@ -91,6 +91,21 @@ class TierManager:
         peer.staging[name] = (self.versions.get(name, 0) if tag is None
                               else tag, _to_host(self.hbm[name]))
 
+    def ldiscard(self, name: str):
+        """Drop an object from the volatile HBM tier (slot freed — e.g. a
+        finished serving session's KV cache).  The version counter is KEPT:
+        if the name is ever lstored again the counter keeps rising, so a
+        late write can never collide with a pool file an older manifest
+        still references.  No-op if absent."""
+        self.hbm.pop(name, None)
+
+    def rload(self, name: str) -> Optional[Any]:
+        """Read back a value staged INTO this worker's host buffer by a
+        peer's rstore (the staging-tier restore path of the KV-cache
+        manager).  Returns the host tree or None."""
+        staged = self.staging.get(name)
+        return None if staged is None else staged[1]
+
     def rflush(self, name: str) -> PoolObject:
         """Durable write; returns once the object is on storage."""
         self.flit_counter[name] = self.flit_counter.get(name, 0) + 1

@@ -1,0 +1,39 @@
+"""Pallas API / platform compatibility for the kernel package.
+
+Two concerns, both version/host related rather than kernel logic:
+
+* ``compiler_params(**kw)`` — Mosaic's compiler-params dataclass was
+  renamed ``TPUCompilerParams`` -> ``CompilerParams`` across JAX releases;
+  resolve whichever this JAX ships so the kernels import on both (the
+  pre-rename class raised ``AttributeError`` on every kernel call and took
+  32 tier-1 tests down with it on CPU hosts).
+* ``on_accelerator()`` / ``default_interpret()`` — Pallas TPU kernels can
+  only *compile* against a real TPU backend; on CPU they must run in
+  ``interpret`` mode (the kernel body executed by the interpreter, same
+  numerics).  Tests and benchmarks use ``default_interpret()`` so the same
+  sweep runs compiled on TPU and interpreted on CPU instead of failing or
+  skipping.
+"""
+from __future__ import annotations
+
+import jax
+from jax.experimental.pallas import tpu as pltpu
+
+_COMPILER_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+
+
+def compiler_params(**kwargs):
+    """Build Mosaic compiler params under either JAX naming."""
+    return _COMPILER_PARAMS_CLS(**kwargs)
+
+
+def on_accelerator() -> bool:
+    """True when a real TPU/GPU backend is the default."""
+    return jax.default_backend() not in ("cpu",)
+
+
+def default_interpret() -> bool:
+    """interpret=... default for this host: compiled on TPU, interpreted
+    elsewhere."""
+    return not on_accelerator()

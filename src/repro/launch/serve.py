@@ -1,7 +1,19 @@
-"""Serving launcher: batched prefill + decode on a (data, model) mesh.
+"""Serving launcher: continuous batching over the durable tier stack.
 
-    python -m repro.launch.serve --arch deepseek-v2-236b --smoke \
-        --batch 8 --prompt-len 128 --new-tokens 64
+Thin front-end over ``repro.serve`` — the slot scheduler, tiered KV-cache
+manager and durable session store live there; this file only parses
+flags, builds the (data, model) mesh and reports throughput.
+
+    # stateless continuous batching, mixed-length synthetic trace
+    python -m repro.launch.serve --arch olmo-1b --smoke --requests 16
+
+    # durable serving: sessions commit through the FliT path; re-running
+    # the same command after a kill resumes every committed session
+    python -m repro.launch.serve --smoke --pool /tmp/serve_pool \
+        --commit-every 4
+
+    # the static-batch baseline the benchmark compares against
+    python -m repro.launch.serve --smoke --mode static
 """
 from __future__ import annotations
 
@@ -9,63 +21,77 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
-from repro.configs import ARCH_IDS, get_config, get_smoke_config
-from repro.models.registry import build
+from repro.dsm.flit_runtime import COMMIT_MODES
 from repro.parallel.sharding import ctx_for_mesh
-from repro.train.elastic import shardings_for
-from repro.train.step import make_serve_steps
+from repro.serve.engine import build_serve_engine, servable_archs
+from repro.serve.trace import synthetic_trace, trace_t_max
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="olmo-1b", choices=ARCH_IDS)
+    ap.add_argument("--arch", default="olmo-1b", choices=servable_archs())
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--mode", default="continuous",
+                    choices=["continuous", "static"])
+    ap.add_argument("--slots", type=int, default=4,
+                    help="decode slots (= static batch size)")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", default="4,8,16,32,48",
+                    help="cycled per-request decode budgets (the mixed-"
+                         "length workload)")
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--mesh-model", type=int, default=1)
+    ap.add_argument("--pool", default=None,
+                    help="DSM pool dir: enables durable sessions + resume")
+    ap.add_argument("--commit-every", type=int, default=4,
+                    help="session-commit cadence in decode ticks")
+    ap.add_argument("--commit-mode", default="sync", choices=COMMIT_MODES)
+    ap.add_argument("--retire-done", action="store_true",
+                    help="drop finished sessions from the committed table "
+                         "(bounds commit cost for long-lived serving; "
+                         "restarts then replay only unfinished sessions)")
+    ap.add_argument("--restore-mode", default="cache",
+                    choices=["cache", "replay"])
     args = ap.parse_args()
 
     n_dev = jax.device_count()
     mesh = jax.make_mesh((max(n_dev // args.mesh_model, 1),
                           args.mesh_model), ("data", "model"))
     ctx = ctx_for_mesh(mesh)
-    cfg = (get_smoke_config(args.arch) if args.smoke
-           else get_config(args.arch))
-    t_max = args.prompt_len + args.new_tokens
-    bundle = build(cfg, dec_pos_len=t_max)
-    key = jax.random.PRNGKey(0)
-    params = jax.tree_util.tree_map(
-        jax.device_put, bundle.init_params(key),
-        shardings_for(ctx, bundle.descs))
 
-    batch = {"tokens": jax.random.randint(
-        key, (args.batch, args.prompt_len), 0, cfg.vocab_size)}
-    if cfg.is_encdec:
-        batch["enc_embeds"] = jax.random.normal(
-            key, (args.batch, cfg.encdec.enc_seq, cfg.d_model), jnp.bfloat16)
-    caches = bundle.init_caches(key, args.batch, t_max)
+    new_tokens = tuple(int(t) for t in args.new_tokens.split(","))
+    trace = synthetic_trace(args.requests, seed=args.seed,
+                            prompt_lens=(args.prompt_len,),
+                            new_tokens=new_tokens, vocab_size=1)
+    engine, cfg = build_serve_engine(
+        args.arch, smoke=args.smoke, n_slots=args.slots,
+        t_max=trace_t_max(trace), ctx=ctx, pool_path=args.pool,
+        commit_every=args.commit_every, commit_mode=args.commit_mode,
+        restore_mode=args.restore_mode, retire_done=args.retire_done,
+        seed=args.seed)
+    # regenerate with the real vocab now the config is known
+    trace = synthetic_trace(args.requests, seed=args.seed,
+                            prompt_lens=(args.prompt_len,),
+                            new_tokens=new_tokens,
+                            vocab_size=cfg.vocab_size)
 
-    prefill_fn, decode_fn = make_serve_steps(bundle, ctx)
-    prefill = jax.jit(prefill_fn)
-    decode = jax.jit(decode_fn)
-
+    resumed = engine.resume() if args.pool else None
+    if resumed is not None:
+        print(f"resumed from committed tick {resumed}")
     t0 = time.perf_counter()
-    logits, state = prefill(params, batch, caches)
-    jax.block_until_ready(logits)
-    print(f"prefill {args.batch}x{args.prompt_len}: "
-          f"{(time.perf_counter()-t0)*1e3:.0f} ms (incl. compile)")
-
-    tokens = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-    t0 = time.perf_counter()
-    for _ in range(args.new_tokens - 1):
-        logits, state = decode(params, tokens, state)
-        tokens = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-    jax.block_until_ready(tokens)
+    res = (engine.run(trace) if args.mode == "continuous"
+           else engine.run_static(trace))
     dt = time.perf_counter() - t0
-    print(f"decode: {(args.new_tokens-1)*args.batch/dt:.0f} tok/s")
+    engine.close()
+    print(f"{res.mode}: {len(res.outputs)} requests, "
+          f"{res.emitted_tokens} tokens in {dt:.2f}s "
+          f"({res.emitted_tokens / dt:.0f} tok/s incl. compile), "
+          f"{res.decode_ticks} decode ticks, {res.prefills} prefills"
+          + (f", {res.commits} session commits" if res.commits else "")
+          + (f", {res.resumed_sessions} sessions resumed"
+             if res.resumed_sessions else ""))
 
 
 if __name__ == "__main__":

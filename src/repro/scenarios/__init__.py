@@ -7,13 +7,18 @@ post-completeOp — then restarted; the restarted process must recover to
 SOME completed commit (in fact the newest one) and finish the run with a
 final state bit-identical to an uninterrupted reference run.
 
-* ``repro.scenarios.worker`` — the killable worker process (CLI);
+* ``repro.scenarios.worker`` — the killable TRAINING worker process (CLI);
+* ``repro.scenarios.serve_worker`` — the killable SERVING worker: a
+  continuous-batching engine whose session commits ride the same FliT
+  path; kill + restart must replay every committed session with
+  bit-identical output tokens;
 * ``repro.scenarios.runner`` — orchestrates kill -> inspect -> restart ->
-  compare, one scenario per kill point (CLI + library API).
+  compare, one scenario per kill point for both suites (CLI:
+  ``--suite train|serve|all``; library: ``run_scenario`` / ``run_suite``
+  / ``run_serve_scenario`` / ``run_serve_suite``).
 
-Import ``run_scenario`` / ``run_suite`` from ``repro.scenarios.runner``
-(submodules are not re-exported here so ``python -m`` entry points stay
-clean).
+Import the run functions from ``repro.scenarios.runner`` (submodules are
+not re-exported here so ``python -m`` entry points stay clean).
 """
 from repro.dsm.flit_runtime import KILL_POINTS
 

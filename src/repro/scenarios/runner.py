@@ -1,7 +1,7 @@
 """Scenario runner: kill a worker inside the commit window, restart it,
 and check the durable-linearizability contract end to end.
 
-One scenario (``run_scenario``):
+One TRAIN scenario (``run_scenario``):
 
 1. **kill phase** — launch ``repro.scenarios.worker`` with a kill point;
    the process ``os._exit``s mid-commit (exit code KILL_EXIT);
@@ -15,11 +15,20 @@ One scenario (``run_scenario``):
    params digest must equal an uninterrupted reference run (crash +
    recover + replay is bit-identical — prefix consistency).
 
-``run_suite`` runs all three kill points; the CLI prints one line per
-scenario:
+One SERVE scenario (``run_serve_scenario``) applies the same protocol to
+the continuous-batching serving worker (``repro.scenarios.serve_worker``):
+kill inside a SESSION commit, restart, and require that the restarted
+worker (a) resumed from the newest completed session commit and (b)
+finished the trace with every session's output tokens BIT-IDENTICAL to an
+uninterrupted reference run — committed sessions replay exactly, whether
+restored from their committed KV cache or re-decoded from the prompt.
 
-    PYTHONPATH=src python -m repro.scenarios.runner [--workdir DIR]
-        [--steps 8] [--commit-every 2] [--mode sharded-async] [--shards 4]
+``run_suite`` / ``run_serve_suite`` run all three kill points; the CLI
+prints one line per scenario:
+
+    PYTHONPATH=src python -m repro.scenarios.runner [--suite all]
+        [--workdir DIR] [--steps 8] [--commit-every 2]
+        [--mode sharded-async] [--shards 4]
 """
 from __future__ import annotations
 
@@ -156,28 +165,166 @@ def run_suite(workdir: Optional[str] = None, **kwargs) -> List[ScenarioResult]:
             for p in KILL_POINTS]
 
 
+# ---------------------------------------------------------------------------
+# Serve-worker scenarios
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ServeScenarioResult:
+    kill_point: str
+    killed: bool
+    completed_ticks_at_kill: List[int]   # session-commit ticks durable at death
+    resumed_from: Optional[int]
+    resumed_sessions: int
+    recovered_done: int                  # sessions already finished at death
+    outputs_match: bool                  # restart outputs == reference, exact
+    detail: str = ""
+
+    @property
+    def recovered_completed_commit(self) -> bool:
+        return (self.resumed_from is not None
+                and self.resumed_from in self.completed_ticks_at_kill)
+
+    @property
+    def ok(self) -> bool:
+        return (self.killed
+                and self.recovered_completed_commit
+                and self.resumed_from == max(self.completed_ticks_at_kill)
+                and self.outputs_match)
+
+
+def _run_serve_worker(pool: str, *, requests: int, slots: int,
+                      commit_every: int, restore_mode: str,
+                      kill_point: str, kill_step: int,
+                      timeout: int) -> subprocess.CompletedProcess:
+    cmd = [sys.executable, "-m", "repro.scenarios.serve_worker",
+           "--pool", pool, "--requests", str(requests),
+           "--slots", str(slots), "--commit-every", str(commit_every),
+           "--restore-mode", restore_mode,
+           "--kill-point", kill_point, "--kill-step", str(kill_step)]
+    return subprocess.run(cmd, env=_worker_env(), capture_output=True,
+                          text=True, timeout=timeout)
+
+
+def serve_reference(workdir: str, *, requests: int = 10, slots: int = 4,
+                    commit_every: int = 3, restore_mode: str = "cache",
+                    timeout: int = 600) -> dict:
+    """Uninterrupted serve run: per-session outputs every kill scenario
+    must reproduce exactly."""
+    proc = _run_serve_worker(os.path.join(workdir, "serve_reference"),
+                             requests=requests, slots=slots,
+                             commit_every=commit_every,
+                             restore_mode=restore_mode,
+                             kill_point="none", kill_step=0,
+                             timeout=timeout)
+    if proc.returncode != 0:
+        raise RuntimeError(f"serve reference failed: {proc.stderr[-2000:]}")
+    return _result_json(proc)["outputs"]
+
+
+def run_serve_scenario(kill_point: str, workdir: str, *, requests: int = 10,
+                       slots: int = 4, commit_every: int = 3,
+                       restore_mode: str = "cache",
+                       kill_step: int = 6,
+                       ref_outputs: Optional[dict] = None,
+                       timeout: int = 600) -> ServeScenarioResult:
+    assert kill_point in KILL_POINTS, kill_point
+    pool = os.path.join(workdir, f"serve_{kill_point}_{restore_mode}")
+
+    # 1. kill phase: die inside the session-commit window
+    p1 = _run_serve_worker(pool, requests=requests, slots=slots,
+                           commit_every=commit_every,
+                           restore_mode=restore_mode,
+                           kill_point=kill_point, kill_step=kill_step,
+                           timeout=timeout)
+    killed = p1.returncode == KILL_EXIT
+    if not killed:
+        return ServeScenarioResult(kill_point, False, [], None, 0, 0, False,
+                                   detail=f"kill phase rc={p1.returncode}: "
+                                          f"{p1.stderr[-1000:]}")
+
+    # 2. session commits durable at the moment of death
+    completed = sorted(m["step"] for m in DSMPool(pool).manifests_desc())
+
+    # 3. restart: recover + finish the trace
+    p2 = _run_serve_worker(pool, requests=requests, slots=slots,
+                           commit_every=commit_every,
+                           restore_mode=restore_mode,
+                           kill_point="none", kill_step=0, timeout=timeout)
+    if p2.returncode != 0:
+        return ServeScenarioResult(kill_point, True, completed, None, 0, 0,
+                                   False,
+                                   detail=f"restart rc={p2.returncode}: "
+                                          f"{p2.stderr[-1000:]}")
+    res = _result_json(p2)
+
+    # 4. verdict: every session's tokens bit-identical to the reference
+    if ref_outputs is None:
+        ref_outputs = serve_reference(workdir, requests=requests,
+                                      slots=slots,
+                                      commit_every=commit_every,
+                                      restore_mode=restore_mode,
+                                      timeout=timeout)
+    return ServeScenarioResult(
+        kill_point, True, completed, res["resumed_from"],
+        res["resumed_sessions"], res["recovered_done"],
+        res["outputs"] == ref_outputs)
+
+
+def run_serve_suite(workdir: Optional[str] = None, **kwargs
+                    ) -> List[ServeScenarioResult]:
+    """All three kill points against one shared serve reference run."""
+    workdir = workdir or tempfile.mkdtemp(prefix="scenarios_")
+    ref = serve_reference(workdir, **{k: v for k, v in kwargs.items()
+                                      if k != "kill_step"})
+    return [run_serve_scenario(p, workdir, ref_outputs=ref, **kwargs)
+            for p in KILL_POINTS]
+
+
 def main(argv=None) -> int:
     import argparse
     ap = argparse.ArgumentParser()
+    ap.add_argument("--suite", default="train",
+                    choices=["train", "serve", "all"])
     ap.add_argument("--workdir", default=None)
     ap.add_argument("--steps", type=int, default=8)
     ap.add_argument("--commit-every", type=int, default=2)
     ap.add_argument("--mode", default="sharded-async")
     ap.add_argument("--shards", type=int, default=4)
     ap.add_argument("--model", default="toy", choices=["toy", "smoke"])
+    ap.add_argument("--requests", type=int, default=10,
+                    help="serve suite: trace length")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="serve suite: decode slots")
+    ap.add_argument("--restore-mode", default="cache",
+                    choices=["cache", "replay"])
     args = ap.parse_args(argv)
-    results = run_suite(args.workdir, steps=args.steps,
-                        commit_every=args.commit_every, mode=args.mode,
-                        shards=args.shards, model=args.model)
+    workdir = args.workdir or tempfile.mkdtemp(prefix="scenarios_")
     failed = 0
-    for r in results:
-        status = "OK" if r.ok else "FAIL"
-        failed += not r.ok
-        print(f"scenario,{r.kill_point},{status},"
-              f"completed={r.completed_steps_at_kill},"
-              f"resumed={r.resumed_from},source={r.recovery_source},"
-              f"digest_match={r.final_digest == r.reference_digest}"
-              + (f",detail={r.detail}" if r.detail else ""))
+    if args.suite in ("train", "all"):
+        for r in run_suite(workdir, steps=args.steps,
+                           commit_every=args.commit_every, mode=args.mode,
+                           shards=args.shards, model=args.model):
+            status = "OK" if r.ok else "FAIL"
+            failed += not r.ok
+            print(f"scenario,{r.kill_point},{status},"
+                  f"completed={r.completed_steps_at_kill},"
+                  f"resumed={r.resumed_from},source={r.recovery_source},"
+                  f"digest_match={r.final_digest == r.reference_digest}"
+                  + (f",detail={r.detail}" if r.detail else ""))
+    if args.suite in ("serve", "all"):
+        for r in run_serve_suite(workdir, requests=args.requests,
+                                 slots=args.slots,
+                                 restore_mode=args.restore_mode):
+            status = "OK" if r.ok else "FAIL"
+            failed += not r.ok
+            print(f"serve_scenario,{r.kill_point},{status},"
+                  f"completed={r.completed_ticks_at_kill},"
+                  f"resumed={r.resumed_from},"
+                  f"resumed_sessions={r.resumed_sessions},"
+                  f"recovered_done={r.recovered_done},"
+                  f"outputs_bit_identical={r.outputs_match}"
+                  + (f",detail={r.detail}" if r.detail else ""))
     return 1 if failed else 0
 
 

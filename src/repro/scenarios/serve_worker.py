@@ -1,0 +1,117 @@
+"""The killable SERVE worker: one continuous-batching serving process
+over a DSM pool.
+
+Serving twin of ``repro.scenarios.worker``: runs the durable serving
+engine (``repro.serve``) on a deterministic synthetic request trace and,
+when ``--kill-point`` is set, dies with ``os._exit(KILL_EXIT)`` the first
+time the session committer's fault hook fires at that point on or after
+``--kill-step`` — a real process death inside the session-commit window,
+cutting cache flushes off wherever they happen to be.
+
+On restart (same command, ``--kill-point none``) the engine recovers the
+newest completed session commit from the pool: finished sessions come
+back as results, running sessions resume from their committed KV cache
+(or replay from the prompt with ``--restore-mode replay``).  The JSON
+result on stdout reports every session's output tokens plus a CRC digest
+so the runner can compare kill+restart against an uninterrupted
+reference run — the durable-serving contract is that they are
+bit-identical.
+
+    PYTHONPATH=src python -m repro.scenarios.serve_worker \
+        --pool /tmp/sp --kill-point mid_flush --kill-step 6
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import zlib
+
+from repro.dsm.flit_runtime import COMMIT_MODES, KILL_POINTS
+from repro.scenarios.worker import KILL_EXIT
+
+
+def outputs_digest(outputs: dict) -> int:
+    """CRC32 over the canonicalized per-session outputs — the
+    cross-process equality check."""
+    doc = json.dumps({k: outputs[k] for k in sorted(outputs)},
+                     separators=(",", ":"))
+    return zlib.crc32(doc.encode())
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pool", required=True)
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--requests", type=int, default=10)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", default="4,8,16,24")
+    ap.add_argument("--commit-every", type=int, default=3)
+    ap.add_argument("--commit-mode", default="sync", choices=COMMIT_MODES)
+    ap.add_argument("--restore-mode", default="cache",
+                    choices=["cache", "replay"])
+    ap.add_argument("--kill-point", default="none",
+                    choices=("none",) + KILL_POINTS)
+    ap.add_argument("--kill-step", type=int, default=6,
+                    help="fire at the first --kill-point hook whose commit "
+                         "tick is >= this")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--result", default="")
+    args = ap.parse_args(argv)
+
+    hook = None
+    if args.kill_point != "none":
+        def hook(point, step):
+            if point == args.kill_point and step >= args.kill_step:
+                sys.stderr.write(f"KILL {point} tick={step}\n")
+                sys.stderr.flush()
+                os._exit(KILL_EXIT)
+
+    # imports after arg parsing: a bad flag should not pay jax startup
+    from repro.serve.engine import build_serve_engine
+    from repro.serve.trace import synthetic_trace, trace_t_max
+
+    new_tokens = tuple(int(t) for t in args.new_tokens.split(","))
+    # the trace is a pure function of the CLI args: the restarted process
+    # regenerates the exact request stream the killed one was serving
+    trace = synthetic_trace(args.requests, seed=args.seed,
+                            prompt_lens=(args.prompt_len,),
+                            new_tokens=new_tokens, vocab_size=1)
+    engine, cfg = build_serve_engine(
+        args.arch, smoke=True, n_slots=args.slots,
+        t_max=trace_t_max(trace), pool_path=args.pool,
+        commit_every=args.commit_every, commit_mode=args.commit_mode,
+        restore_mode=args.restore_mode, fault_hook=hook, seed=args.seed)
+    trace = synthetic_trace(args.requests, seed=args.seed,
+                            prompt_lens=(args.prompt_len,),
+                            new_tokens=new_tokens,
+                            vocab_size=cfg.vocab_size)
+
+    resumed_from = engine.resume()
+    recovered_done = len(engine.results)      # finished before the kill
+    res = engine.run(trace)
+    engine.close()
+
+    result = {
+        "ok": True,
+        "outputs": res.outputs,
+        "digest": outputs_digest(res.outputs),
+        "resumed_from": resumed_from,
+        "resumed_sessions": res.resumed_sessions,
+        "recovered_done": recovered_done,
+        "commits": res.commits,
+        "decode_ticks": res.decode_ticks,
+        "prefills": res.prefills,
+    }
+    line = json.dumps(result)
+    if args.result:
+        with open(args.result, "w") as f:
+            f.write(line)
+    print(line)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

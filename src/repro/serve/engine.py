@@ -1,0 +1,334 @@
+"""ServeEngine: continuous batching + tiered KV caches + durable sessions.
+
+The serving loop per decode tick:
+
+1. **admit** — free slots refill FIFO from the scheduler; each admission
+   prefills ONE sequence (B=1, compiled once per distinct prompt length),
+   writes its cache into the slot lane and emits its first token;
+2. **decode** — one slot-masked batched decode step advances every
+   running slot at its own position (``train.step.make_slot_decode_step``
+   — a per-slot vmap, so slot contents never influence each other);
+3. **retire** — sequences that hit their token budget free their slot in
+   the same tick (the scheduler contract), and their cache leaves the
+   host tier;
+4. **commit** (every ``commit_every`` ticks, durable pools only) — every
+   running slot's cache is staged into the host tier and the FliT
+   committer flushes them + the full session table in one atomic
+   completeOp (serve.sessions).
+
+Crash recovery: a restarted worker calls ``resume()`` — finished
+sessions come back as results; running sessions re-enter the admission
+queue AHEAD of fresh requests with their committed cache restored into a
+lane (``restore_mode="cache"``) or replayed from the prompt
+(``restore_mode="replay"``).  Both are bit-identical to the
+uninterrupted run: the restored bytes ARE the committed HBM bytes, and a
+replay re-executes the identical deterministic computation.
+
+``run_static`` is the old static-batch loop kept as the benchmark
+baseline: batched prefill, then decode until the LONGEST sequence of the
+batch finishes — the behaviour whose hostage effect continuous batching
+removes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.kvcache import TieredKVCache
+from repro.serve.scheduler import Request, SlotScheduler
+from repro.serve.sessions import Session, SessionStore
+from repro.train.step import make_serve_steps, make_slot_decode_step
+
+
+@dataclasses.dataclass
+class ServeResult:
+    outputs: Dict[str, List[int]]     # rid -> emitted token ids
+    decode_ticks: int
+    prefills: int
+    emitted_tokens: int
+    mode: str
+    resumed_step: Optional[int] = None
+    resumed_sessions: int = 0
+    commits: int = 0
+
+
+class ServeEngine:
+    def __init__(self, bundle, params, *, n_slots: int = 4,
+                 t_max: int = 96, ctx=None,
+                 store: Optional[SessionStore] = None,
+                 commit_every: int = 0,
+                 restore_mode: str = "cache",
+                 retire_done: bool = False):
+        assert restore_mode in ("cache", "replay"), restore_mode
+        if bundle.cfg.is_encdec:
+            raise ValueError(
+                "the serving subsystem is decoder-only (the slot-masked "
+                "decode has no encoder-state plumbing); encoder-decoder "
+                "archs are not servable — see serve.engine.servable_archs")
+        self.bundle = bundle
+        self.params = params
+        self.n_slots = n_slots
+        self.t_max = t_max
+        self.store = store
+        self.commit_every = commit_every if store is not None else 0
+        self.restore_mode = restore_mode
+        self.retire_done = retire_done
+
+        prefill_step, decode_step = make_serve_steps(bundle, ctx)
+        self._prefill = jax.jit(prefill_step)
+        self._decode = jax.jit(decode_step)           # static baseline
+        self._slot_decode = jax.jit(make_slot_decode_step(bundle, ctx),
+                                    donate_argnums=(2,))
+
+        self.kv = TieredKVCache(bundle, n_slots, t_max,
+                                tiers=store.tiers if store else None)
+        self._caches1 = bundle.init_caches(jax.random.PRNGKey(0), 1, t_max)
+        self.sched = SlotScheduler(n_slots)
+        self.sessions: Dict[str, Session] = {}
+        self.results: Dict[str, List[int]] = {}
+        self._resume_cache: Dict[str, Any] = {}
+        # host-side slot state
+        self.pos = np.zeros(n_slots, np.int32)
+        self.last_token = np.zeros(n_slots, np.int32)
+        self.active = np.zeros(n_slots, bool)
+        self._tick = 0
+        self._resumed_step: Optional[int] = None
+        self._n_resumed = 0
+        self._n_prefills = 0
+        self._n_commits = 0
+
+    # -- request intake ------------------------------------------------------
+    def submit(self, requests: Sequence[Request]):
+        fresh = []
+        for r in requests:
+            assert len(r.prompt) + r.max_new_tokens <= self.t_max, \
+                (r.rid, len(r.prompt), r.max_new_tokens, self.t_max)
+            if r.rid in self.sessions or r.rid in self.results:
+                continue    # recovered, resuming, or retired-done — skip
+            fresh.append(r)
+        self.sched.submit(fresh)
+
+    # -- crash recovery ------------------------------------------------------
+    def resume(self) -> Optional[int]:
+        """Recover the newest session commit from the pool.  Finished
+        sessions become results; unfinished ones are queued for admission
+        AHEAD of any fresh request (they were admitted first in the killed
+        incarnation).  Returns the recovered tick or None (cold pool)."""
+        if self.store is None:
+            return None
+        rec = self.store.recover(self.kv.template1)
+        if rec is None:
+            return None
+        for rid, s in rec.sessions.items():
+            self.sessions[rid] = s
+            if s.done:
+                self.results[rid] = list(s.emitted)
+            else:
+                self._resume_cache[rid] = rec.caches.get(rid)
+                self._n_resumed += 1
+                self.sched.submit([Request(rid, s.prompt,
+                                           s.max_new_tokens)])
+        self._resumed_step = rec.step
+        self._tick = rec.step + 1
+        return rec.step
+
+    # -- the continuous-batching loop ---------------------------------------
+    def run(self, requests: Optional[Sequence[Request]] = None
+            ) -> ServeResult:
+        if requests:
+            self.submit(requests)
+        ticks0 = self._tick
+        while not self.sched.done:
+            for slot, req in self.sched.admit():
+                self._admit(slot, req)
+            if self.sched.n_running:
+                self._decode_tick()
+            self._tick += 1
+            if self.commit_every and self._tick % self.commit_every == 0:
+                self._commit()
+        if self.store is not None:
+            self._commit()            # final table (all sessions done)
+            self.store.drain()
+        return ServeResult(
+            outputs=dict(self.results),
+            decode_ticks=self._tick - ticks0,
+            prefills=self._n_prefills,
+            emitted_tokens=sum(len(v) for v in self.results.values()),
+            mode="continuous",
+            resumed_step=self._resumed_step,
+            resumed_sessions=self._n_resumed,
+            commits=self._n_commits)
+
+    def _admit(self, slot: int, req: Request):
+        rid = req.rid
+        s = self.sessions.get(rid)
+        if s is not None and not s.done:
+            cache1 = self._resume_cache.pop(rid, None)
+            if (self.restore_mode == "cache" and cache1 is not None
+                    and s.emitted):
+                # fast-forward: committed cache bytes back into a lane
+                self.kv.write_slot(slot, cache1)
+                self.pos[slot] = s.pos
+                self.last_token[slot] = s.emitted[-1]
+                self.active[slot] = True
+                return
+            s.emitted = []            # replay: re-decode from the prompt
+        else:
+            s = Session(rid, tuple(req.prompt), req.max_new_tokens)
+            self.sessions[rid] = s
+        tokens = jnp.asarray(np.asarray(s.prompt, np.int32)[None])
+        logits, st = self._prefill(self.params, {"tokens": tokens},
+                                   self._caches1)
+        self._n_prefills += 1
+        tok0 = int(jnp.argmax(logits, -1)[0])
+        self.kv.write_slot(slot, st.caches)
+        self.pos[slot] = len(s.prompt)
+        self.last_token[slot] = tok0
+        self.active[slot] = True
+        s.emitted.append(tok0)
+        if len(s.emitted) >= s.max_new_tokens:
+            self._finish(rid, slot)
+
+    def _decode_tick(self):
+        next_toks, _, new_caches, new_pos = self._slot_decode(
+            self.params, jnp.asarray(self.last_token[:, None]),
+            self.kv.caches, jnp.asarray(self.pos),
+            jnp.asarray(self.active))
+        self.kv.caches = new_caches
+        self.pos = np.array(new_pos)      # copy: np.asarray of a jax
+        #                                   array is a read-only view
+        toks = np.asarray(next_toks)
+        for rid, slot in list(self.sched.running.items()):
+            s = self.sessions[rid]
+            tok = int(toks[slot])
+            s.emitted.append(tok)
+            self.last_token[slot] = tok
+            if len(s.emitted) >= s.max_new_tokens:
+                self._finish(rid, slot)
+
+    def _finish(self, rid: str, slot: int):
+        self.sched.release(rid)
+        self.active[slot] = False
+        s = self.sessions[rid]
+        s.done = True
+        self.results[rid] = list(s.emitted)
+        if self.store is not None:
+            self.store.discard(rid)
+
+    def _commit(self):
+        assert self.store is not None
+        for rid, slot in self.sched.running.items():
+            self.store.stage(self.sessions[rid], self.kv.read_slot(slot))
+        self.store.commit(self.sessions, self._tick)
+        self._n_commits += 1
+        if self.retire_done:
+            # done sessions were durable in the table just committed;
+            # retire them so commit cost stays O(live sessions) instead of
+            # O(total request history).  Their outputs remain in
+            # self.results (delivered to the caller) but a later restart
+            # will no longer replay them — the long-lived-service policy.
+            for rid in [r for r, s in self.sessions.items() if s.done]:
+                del self.sessions[rid]
+
+    # -- static baseline -----------------------------------------------------
+    def run_static(self, requests: Sequence[Request]) -> ServeResult:
+        """FIFO batches of ``n_slots``; each batch decodes until its
+        LONGEST sequence finishes (the hostage effect)."""
+        outputs: Dict[str, List[int]] = {}
+        ticks = prefills = 0
+        reqs = list(requests)
+        for i in range(0, len(reqs), self.n_slots):
+            batch = reqs[i:i + self.n_slots]
+            lens = {len(r.prompt) for r in batch}
+            assert len(lens) == 1, \
+                "static baseline batches unpadded prompts (uniform length)"
+            toks = jnp.asarray(np.asarray([r.prompt for r in batch],
+                                          np.int32))
+            caches = self.bundle.init_caches(jax.random.PRNGKey(0),
+                                             len(batch), self.t_max)
+            logits, st = self._prefill(self.params, {"tokens": toks},
+                                       caches)
+            prefills += 1
+            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+            emitted = [[int(t)] for t in np.asarray(tok[:, 0])]
+            for _ in range(max(r.max_new_tokens for r in batch) - 1):
+                logits, st = self._decode(self.params, tok, st)
+                tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+                ticks += 1
+                for row, t in enumerate(np.asarray(tok[:, 0])):
+                    emitted[row].append(int(t))
+            for r, row in zip(batch, emitted):
+                outputs[r.rid] = row[:r.max_new_tokens]
+        return ServeResult(
+            outputs=outputs, decode_ticks=ticks, prefills=prefills,
+            emitted_tokens=sum(len(v) for v in outputs.values()),
+            mode="static")
+
+    # -- utilities -----------------------------------------------------------
+    def warmup(self, prompt_lens: Sequence[int]):
+        """Compile prefill per distinct prompt length + the decode step,
+        outside any timed region."""
+        for L in sorted(set(int(l) for l in prompt_lens)):
+            tokens = jnp.zeros((1, L), jnp.int32)
+            logits, _ = self._prefill(self.params, {"tokens": tokens},
+                                      self._caches1)
+            jax.block_until_ready(logits)
+        nt, _, self.kv.caches, _ = self._slot_decode(
+            self.params, jnp.asarray(self.last_token[:, None]),
+            self.kv.caches, jnp.asarray(self.pos),
+            jnp.asarray(self.active))
+        jax.block_until_ready(nt)
+
+    def close(self):
+        if self.store is not None:
+            self.store.close()
+
+
+def servable_archs():
+    """Arch ids the serving subsystem supports (decoder-only — the
+    slot-masked decode has no encoder-state plumbing).  Used by the CLI
+    front-ends as argparse choices so encoder-decoder archs are rejected
+    up front instead of deep in engine construction."""
+    from repro.configs import ARCH_IDS, get_smoke_config
+    return [a for a in ARCH_IDS if not get_smoke_config(a).is_encdec]
+
+
+def build_serve_engine(arch: str = "olmo-1b", *, smoke: bool = True,
+                       n_slots: int = 4, t_max: int = 96, ctx=None,
+                       pool_path: Optional[str] = None,
+                       commit_every: int = 0, commit_mode: str = "sync",
+                       n_shards: Optional[int] = None, retention: int = 2,
+                       fault_hook=None, restore_mode: str = "cache",
+                       retire_done: bool = False, seed: int = 0):
+    """One-stop construction shared by the launcher, the example and the
+    killable scenario worker: config -> bundle -> (sharded) params ->
+    optional durable session store -> engine.  Returns (engine, cfg).
+
+    Params are initialized from ``seed`` deterministically, so two
+    processes built with the same arguments hold bit-identical weights —
+    the property crash-replay bit-identity rests on."""
+    from repro.configs import get_config, get_smoke_config
+    from repro.dsm.pool import DSMPool
+    from repro.models.registry import build as build_model
+
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    bundle = build_model(cfg, dec_pos_len=t_max)
+    key = jax.random.PRNGKey(seed)
+    params = bundle.init_params(key)
+    if ctx is not None and ctx.mesh is not None:
+        from repro.train.elastic import shardings_for
+        params = jax.tree_util.tree_map(
+            jax.device_put, params, shardings_for(ctx, bundle.descs))
+    store = None
+    if pool_path is not None:
+        store = SessionStore(DSMPool(pool_path), mode=commit_mode,
+                             n_shards=n_shards, retention=retention,
+                             fault_hook=fault_hook)
+    engine = ServeEngine(bundle, params, n_slots=n_slots, t_max=t_max,
+                         ctx=ctx, store=store, commit_every=commit_every,
+                         restore_mode=restore_mode, retire_done=retire_done)
+    return engine, cfg

@@ -1,0 +1,147 @@
+"""Tiered KV-cache manager: per-slot cache blocks in HBM, cold sessions
+in the staging/pool tiers.
+
+The decode batch's caches live as ONE batched pytree on device (the HBM
+tier) with ``n_slots`` lanes on the per-leaf batch axis (layer-stacked
+groups put batch at axis 1 — the axis map comes from the cache
+descriptors via ``train.step.cache_batch_axes``).  Slot surgery is two
+jitted primitives:
+
+* ``write_slot(slot, cache1)`` — insert a single-sequence cache (fresh
+  prefill, or a restored cold session) into a lane;
+* ``read_slot(slot)``         — extract a lane as a single-sequence cache
+  (for spilling, or for staging into a durable commit).
+
+Cold sessions leave HBM through the CXL0 tiers (``dsm.tiers``):
+
+* ``stage(name, cache1)``            — LStore into the worker's host
+  object tier; from there the FliT committer RFlushes it durably as part
+  of a session commit (serve.sessions);
+* ``spill(name, cache1, peer=...)``  — additionally RStore the copy into
+  a PEER worker's host buffer (survives OUR crash without pool I/O);
+* ``spill_durable(name, cache1)``    — immediate sharded RFlush into the
+  pool, leaves partitioned into byte-balanced blocks
+  (``pool.partition_leaves`` under ``rflush_sharded``); returns the
+  manifest entry needed to restore;
+* ``restore(name, entry=...)``       — best tier first: HBM host object,
+  then peer staging, then pool — byte-identical round-trip in all cases
+  (raw-view npz storage preserves bf16 et al. exactly).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dsm.pool import manifest_entry, partition_leaves
+from repro.dsm.tiers import TierManager
+from repro.train.step import cache_batch_axes
+
+
+class TieredKVCache:
+    def __init__(self, bundle, n_slots: int, t_max: int,
+                 tiers: Optional[TierManager] = None):
+        self.n_slots = n_slots
+        self.t_max = t_max
+        self.tiers = tiers
+        self.axes = cache_batch_axes(bundle)
+        # zero-initialized batched cache (cache descs are init="zeros")
+        self.caches = bundle.init_caches(jax.random.PRNGKey(0), n_slots,
+                                         t_max)
+        self._template1 = bundle.abstract_caches(1, t_max)
+        tm = jax.tree_util.tree_map
+
+        def _write(full, one, slot):
+            return tm(lambda f, o, a: jax.lax.dynamic_update_slice_in_dim(
+                f, o.astype(f.dtype), slot, axis=a), full, one, self.axes)
+
+        def _read(full, slot):
+            return tm(lambda f, a: jax.lax.dynamic_slice_in_dim(
+                f, slot, 1, axis=a), full, self.axes)
+
+        self._write = jax.jit(_write, donate_argnums=0)
+        self._read = jax.jit(_read)
+
+    # -- HBM slot surgery ----------------------------------------------------
+    def write_slot(self, slot: int, cache1: Any):
+        """Insert a single-sequence cache into lane ``slot``."""
+        self.caches = self._write(self.caches, cache1,
+                                  jnp.int32(slot))
+
+    def read_slot(self, slot: int) -> Any:
+        """Extract lane ``slot`` as a single-sequence cache."""
+        return self._read(self.caches, jnp.int32(slot))
+
+    @property
+    def template1(self):
+        """Single-sequence cache pytree prototype (for pool unflattening)."""
+        return self._template1
+
+    # -- tier movement -------------------------------------------------------
+    def _need_tiers(self) -> TierManager:
+        assert self.tiers is not None, "no TierManager configured"
+        return self.tiers
+
+    def stage(self, name: str, cache1: Any) -> int:
+        """LStore a session cache into the host object tier; returns the
+        version the next RFlush/commit of ``name`` will write."""
+        t = self._need_tiers()
+        t.lstore(name, cache1)
+        return t.versions[name]
+
+    def spill(self, name: str, cache1: Any, *,
+              peer: Optional[TierManager] = None) -> int:
+        """Evict to the host tier; optionally RStore-replicate to a peer's
+        staging buffer (the cache then survives our crash without having
+        been flushed)."""
+        version = self.stage(name, cache1)
+        if peer is not None:
+            self._need_tiers().rstore(name, peer, tag=version)
+        return version
+
+    def spill_durable(self, name: str, cache1: Any,
+                      n_blocks: Optional[int] = None) -> dict:
+        """Evict straight to the pool: sharded RFlush over byte-balanced
+        leaf blocks.  Returns the manifest entry for ``restore``."""
+        t = self._need_tiers()
+        self.stage(name, cache1)
+        n = n_blocks or len(self.block_layout())
+        obj = t.rflush_sharded(name, n)
+        return manifest_entry(obj)
+
+    def restore(self, name: str, entry: Optional[dict] = None,
+                *, drop_hot: bool = False) -> Optional[Any]:
+        """Bring a session cache back, best tier first: the host object
+        tier (still resident), then OUR staging buffer (a peer RStored it
+        here), then the pool (needs the manifest ``entry`` from
+        ``spill_durable`` or a session-commit manifest).  Returns None if
+        no tier holds it."""
+        t = self._need_tiers()
+        if name in t.hbm:
+            tree = t.hbm[name]
+            if drop_hot:
+                t.ldiscard(name)
+            return tree
+        staged = t.rload(name)
+        if staged is not None:
+            return staged
+        if entry is not None:
+            return t.pool.read_entry(name, entry, self._template1)
+        return None
+
+    def discard(self, name: str):
+        """Drop a session cache from the host tier (session finished)."""
+        self._need_tiers().ldiscard(name)
+
+    # -- block layout --------------------------------------------------------
+    def block_layout(self, n_blocks: Optional[int] = None) -> List[List[int]]:
+        """Byte-balanced partition of the per-slot cache leaves into spill
+        blocks (``pool.partition_leaves`` — the same layout
+        ``rflush_sharded`` writes).  Default block count: one per local
+        device, clamped by the leaf count."""
+        leaves = jax.tree_util.tree_leaves(self._template1)
+        nbytes = [int(np.prod(l.shape)) * l.dtype.itemsize for l in leaves]
+        n = n_blocks or max(jax.local_device_count(), 1)
+        return partition_leaves(nbytes, n)

@@ -1,0 +1,140 @@
+"""Durable session store: serving state committed through the FliT path.
+
+One *session commit* at decode tick ``s`` is the paper's Alg. 2 over the
+serving worker's live state, exactly as a training checkpoint commit but
+with a DYNAMIC object set:
+
+* objects — one KV-cache object ``kv/<rid>`` per RUNNING session (staged
+  from the slot lanes by the engine just before the commit);
+* meta    — the full session table: per session the prompt, every token
+  emitted so far, done flag and the staged cache version.  The table
+  rides in the manifest document, so it becomes durable by the SAME
+  atomic rename (completeOp) that publishes the cache objects — a
+  session's tokens and its cache can never be torn apart.
+
+A killed serving worker restarts and calls ``recover()``: the newest
+manifest whose every cache object CRC-validates wins
+(``dsm.recovery.RecoveryManager.recover_latest``; torn commits fall back
+exactly as in training recovery).  Finished sessions come back as
+results; running sessions come back as (tokens emitted, restored cache)
+and the engine resumes them — bit-identically, because the restored
+cache bytes equal the committed HBM bytes and the slot-masked decode is
+independent of batch composition (train.step.make_slot_decode_step).
+
+Fault injection: the committer's ``fault_hook`` fires at the usual
+pre_flush / mid_flush / post_completeOp points, which is what the
+serve-worker kill scenario (repro.scenarios.serve_worker) drives.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.dsm.flit_runtime import DurableCommitter
+from repro.dsm.pool import DSMPool
+from repro.dsm.recovery import RecoveryManager
+from repro.dsm.tiers import TierManager
+
+KV_PREFIX = "kv/"
+
+
+def kv_name(rid: str) -> str:
+    return KV_PREFIX + rid
+
+
+@dataclasses.dataclass
+class Session:
+    """One admitted request's serving state."""
+    rid: str
+    prompt: Tuple[int, ...]
+    max_new_tokens: int
+    emitted: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    cache_version: Optional[int] = None
+
+    @property
+    def pos(self) -> int:
+        """Decode position the cache currently covers: the prompt plus
+        every emitted token that has been FED BACK.  The newest emitted
+        token is the next decode's input, so it is not in the cache yet —
+        hence the ``- 1`` (emitted is never empty once admitted: prefill
+        emits the first token)."""
+        return len(self.prompt) + len(self.emitted) - 1
+
+    def to_meta(self) -> dict:
+        return {"prompt": list(self.prompt), "max_new": self.max_new_tokens,
+                "emitted": list(self.emitted), "done": self.done,
+                "cache_version": self.cache_version}
+
+    @classmethod
+    def from_meta(cls, rid: str, d: dict) -> "Session":
+        return cls(rid=rid, prompt=tuple(int(t) for t in d["prompt"]),
+                   max_new_tokens=int(d["max_new"]),
+                   emitted=[int(t) for t in d["emitted"]],
+                   done=bool(d["done"]),
+                   cache_version=d.get("cache_version"))
+
+
+@dataclasses.dataclass
+class RecoveredState:
+    sessions: Dict[str, Session]     # full table (done + running)
+    caches: Dict[str, Any]           # rid -> restored cache (running only)
+    step: int                        # decode tick of the commit
+    seq: int                         # manifest sequence
+
+
+class SessionStore:
+    def __init__(self, pool: DSMPool, *, worker_id: int = 0,
+                 mode: str = "sync", n_shards: Optional[int] = None,
+                 retention: Optional[int] = 2,
+                 fault_hook=None):
+        self.pool = pool
+        self.tiers = TierManager(pool, worker_id)
+        self.committer = DurableCommitter(
+            self.tiers, mode=mode, n_shards=n_shards, retention=retention,
+            fault_hook=fault_hook)
+        self.recovery = RecoveryManager(pool)
+
+    # -- commit side ---------------------------------------------------------
+    def stage(self, session: Session, cache1: Any):
+        """LStore a running session's slot cache for the next commit and
+        record the version it will be durable at."""
+        self.tiers.lstore(kv_name(session.rid), cache1)
+        session.cache_version = self.tiers.versions[kv_name(session.rid)]
+
+    def discard(self, rid: str):
+        """Session finished (or evicted): its cache leaves the host tier so
+        the next commit stops flushing it."""
+        self.tiers.ldiscard(kv_name(rid))
+
+    def commit(self, sessions: Dict[str, Session], step: int):
+        """Alg. 2 commit: RFlush every staged cache, then one completeOp
+        manifest carrying the session table."""
+        meta = {"kind": "serve",
+                "sessions": {rid: s.to_meta()
+                             for rid, s in sessions.items()}}
+        return self.committer.commit(step, meta=meta)
+
+    def drain(self):
+        return self.committer.drain()
+
+    def close(self):
+        self.tiers.close()
+
+    # -- recovery side -------------------------------------------------------
+    def recover(self, cache_template) -> Optional[RecoveredState]:
+        """Newest fully-valid session commit, or None on a cold pool."""
+        got = self.recovery.recover_latest(lambda name, entry:
+                                           cache_template)
+        if got is None:
+            return None
+        objs, m = got
+        meta = m.get("meta") or {}
+        table = meta.get("sessions")
+        if table is None:
+            return None                       # not a serve-worker pool
+        sessions = {rid: Session.from_meta(rid, d)
+                    for rid, d in table.items()}
+        caches = {rid: objs[kv_name(rid)] for rid in sessions
+                  if kv_name(rid) in objs}
+        return RecoveredState(sessions, caches, m["step"], m["seq"])

@@ -1,0 +1,43 @@
+"""Deterministic synthetic request traces.
+
+Benchmarks and the serve-worker kill scenario must agree on the request
+stream across PROCESSES (a restarted worker regenerates the trace from
+the seed), so everything here is a pure function of its arguments:
+prompts come from a seeded generator, request lengths cycle through the
+choice tuples (guaranteed mixed-length without sampling noise).
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serve.scheduler import Request
+
+
+def synthetic_trace(n_requests: int, *, seed: int = 0,
+                    vocab_size: int = 256,
+                    prompt_lens: Sequence[int] = (32,),
+                    new_tokens: Sequence[int] = (4, 8, 16, 32, 48),
+                    ) -> List[Request]:
+    """``n_requests`` deterministic requests.
+
+    ``prompt_lens`` / ``new_tokens`` are cycled in order — a one-element
+    ``prompt_lens`` gives the uniform-prompt trace the static baseline
+    needs (it batches prompts unpadded), while the default ``new_tokens``
+    mix is exactly the mixed-output-length workload where one long
+    sequence holds a static batch hostage."""
+    rng = np.random.default_rng(seed)
+    out: List[Request] = []
+    for i in range(n_requests):
+        L = int(prompt_lens[i % len(prompt_lens)])
+        m = int(new_tokens[i % len(new_tokens)])
+        prompt = tuple(int(t) for t in rng.integers(0, vocab_size, size=L))
+        out.append(Request(rid=f"r{i:04d}", prompt=prompt,
+                           max_new_tokens=m))
+    return out
+
+
+def trace_t_max(requests: Sequence[Request]) -> int:
+    """Cache length covering every request in the trace."""
+    return max(len(r.prompt) + r.max_new_tokens for r in requests)

@@ -3,3 +3,12 @@ import pytest
 
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running exhaustive checks")
+
+
+@pytest.fixture(scope="session")
+def pallas_interpret() -> bool:
+    """Platform-detected Pallas execution mode for kernel tests: compiled
+    on a real accelerator backend, ``interpret=True`` on CPU hosts (same
+    kernel body, run by the Pallas interpreter — numerics identical)."""
+    from repro.kernels.compat import default_interpret
+    return default_interpret()

@@ -1,0 +1,47 @@
+"""System-scale serve-worker kill scenarios (repro.scenarios.serve_worker):
+a REAL serving process is os._exit-killed inside the session-commit window,
+restarted, and must resume from the newest completed session commit and
+finish the trace with every session's output tokens bit-identical to an
+uninterrupted reference run."""
+import pytest
+
+from repro.dsm.flit_runtime import KILL_POINTS
+from repro.scenarios.runner import run_serve_scenario, serve_reference
+
+REQUESTS = 10
+SLOTS = 4
+COMMIT_EVERY = 3
+
+
+@pytest.fixture(scope="module")
+def ref_outputs(tmp_path_factory):
+    """One uninterrupted serving run shared by all kill points."""
+    return serve_reference(str(tmp_path_factory.mktemp("serve_ref")),
+                           requests=REQUESTS, slots=SLOTS,
+                           commit_every=COMMIT_EVERY)
+
+
+@pytest.mark.parametrize("point", KILL_POINTS)
+def test_serve_kill_point_replays_bit_identical(point, tmp_path,
+                                                ref_outputs):
+    res = run_serve_scenario(point, str(tmp_path), requests=REQUESTS,
+                             slots=SLOTS, commit_every=COMMIT_EVERY,
+                             ref_outputs=ref_outputs)
+    assert res.killed, res.detail
+    # recovery landed on a COMPLETED session commit — the newest one
+    assert res.recovered_completed_commit, res
+    assert res.resumed_from == max(res.completed_ticks_at_kill), res
+    # the whole point: kill + restart emits the SAME tokens per session
+    assert res.outputs_match, res
+    assert res.ok
+
+
+def test_serve_replay_restore_mode(tmp_path, ref_outputs):
+    """The prompt-replay restore path (no cache restore) reproduces the
+    same outputs — the deterministic-recompute fallback."""
+    res = run_serve_scenario("post_completeOp", str(tmp_path),
+                             requests=REQUESTS, slots=SLOTS,
+                             commit_every=COMMIT_EVERY,
+                             restore_mode="replay",
+                             ref_outputs=ref_outputs)
+    assert res.killed and res.ok, res
