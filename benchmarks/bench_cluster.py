@@ -1,0 +1,118 @@
+"""Cluster-protocol benchmark: multi-writer commit safety at speed.
+
+Measures (not asserts, except the zero-loss invariant):
+* contended multi-writer commit throughput — K committer threads share
+  one pool; every commit must survive (the O_EXCL seq reservation turns
+  collisions into rescans, never into overwrites) and the row reports
+  commits/s and the rescan (collision) overhead vs a single writer;
+* cross-process staging throughput — RStore spill-file stage + view-read
+  of a multi-MB state partition (the peer-recovery data path);
+* N-process cluster step rate with the full lockstep protocol (board
+  all-reduce + rank records + elected cluster manifests), vs world size.
+
+Output is CSV-ish ``key,value,note`` rows like the other benches.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+from repro.dsm.cluster import FileStagingArea
+from repro.dsm.pool import DSMPool
+from repro.scenarios.cluster import spawn_worker
+
+
+def bench_contended_commits(tmp: str, *, writers=4, per_writer=40):
+    obj_pool = DSMPool(os.path.join(tmp, "contended"))
+    objs = {w: obj_pool.write_object(f"w{w}/x", 1,
+                                     {"a": np.zeros(64, np.float32)})
+            for w in range(writers)}
+
+    def run_writers(n_writers) -> float:
+        pool_dir = os.path.join(tmp, f"commit_{n_writers}")
+        handles = {w: DSMPool(pool_dir) for w in range(n_writers)}
+        for w in range(n_writers):
+            handles[w].write_object(f"w{w}/x", 1,
+                                    {"a": np.zeros(64, np.float32)})
+        t0 = time.perf_counter()
+
+        def work(w):
+            for i in range(per_writer):
+                handles[w].commit_manifest(i, {f"w{w}/x": objs[w]},
+                                           meta={"w": w})
+
+        threads = [threading.Thread(target=work, args=(w,))
+                   for w in range(n_writers)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall = time.perf_counter() - t0
+        ms = DSMPool(pool_dir).manifests_desc()
+        total = n_writers * per_writer
+        assert len(ms) == total, (len(ms), total)     # zero loss, always
+        assert len({m["seq"] for m in ms}) == total
+        return total / wall
+
+    solo = run_writers(1)
+    contended = run_writers(writers)
+    print(f"cluster_commit_rate_1_writer,{solo:.0f},commits/s")
+    print(f"cluster_commit_rate_{writers}_writers,{contended:.0f},"
+          f"commits/s aggregate; zero lost/overwritten commits asserted")
+    print(f"cluster_commit_contention_ratio,{contended / solo:.2f},"
+          f"aggregate vs solo (O_EXCL rescan overhead)")
+
+
+def bench_staging_throughput(tmp: str, *, mb=8):
+    area = FileStagingArea(os.path.join(tmp, "staging"))
+    tree = {"p": np.random.default_rng(0).standard_normal(
+        (mb * 1024 * 1024 // 4,)).astype(np.float32)}
+    t0 = time.perf_counter()
+    area.proxy(1).staging["w0/params"] = (3, tree)
+    t_stage = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    view = area.view(1, {"w0/params": tree})
+    t_view = time.perf_counter() - t0
+    assert np.array_equal(np.asarray(view.staging["w0/params"][1]["p"]),
+                          tree["p"])
+    print(f"cluster_rstore_stage_mb_s,{mb / t_stage:.0f},"
+          f"{mb} MiB partition -> sibling spill buffer")
+    print(f"cluster_staging_view_mb_s,{mb / t_view:.0f},"
+          f"sibling buffer -> recovery view (read + CRC validate)")
+
+
+def bench_cluster_step_rate(tmp: str, *, steps=12, commit_every=3):
+    for world in (2, 3, 4):
+        pool = os.path.join(tmp, f"cluster_w{world}")
+        t0 = time.perf_counter()
+        procs = [spawn_worker(pool, r, world, steps=steps,
+                              commit_every=commit_every, replicate=True)
+                 for r in range(world)]
+        ok = True
+        for p in procs:
+            out, err = p.communicate(timeout=600)
+            ok = ok and p.returncode == 0
+        wall = time.perf_counter() - t0
+        assert ok, "cluster bench worker failed"
+        print(f"cluster_steps_per_s_world{world},{steps / wall:.2f},"
+              f"{steps} lockstep steps, commit every {commit_every} "
+              f"(incl. process startup)")
+
+
+def main():
+    tmp = tempfile.mkdtemp(prefix="bench_cluster_")
+    try:
+        bench_contended_commits(tmp)
+        bench_staging_throughput(tmp)
+        bench_cluster_step_rate(tmp)
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

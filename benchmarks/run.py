@@ -12,13 +12,14 @@ import time
 
 def main() -> None:
     from benchmarks import (bench_latency, bench_table1, bench_flit,
-                            bench_checkpoint, bench_model_fuzz,
-                            bench_serve)
+                            bench_checkpoint, bench_cluster,
+                            bench_model_fuzz, bench_serve)
     modules = [
         ("fig5 latency model", bench_latency),
         ("table1 transaction mapping", bench_table1),
         ("flit transformation (violations + cost)", bench_flit),
         ("durable checkpoint protocol", bench_checkpoint),
+        ("multi-writer cluster protocol", bench_cluster),
         ("continuous-batching serving (static vs slots)", bench_serve),
         ("vectorized semantics fuzzing", bench_model_fuzz),
     ]

@@ -13,6 +13,12 @@ Mapping (DESIGN.md §2):
     completeOp           -> atomic manifest rename
     FliT counter         -> per-object dirty counter consulted by joiners
     crash f_i            -> worker preemption; peers uninterrupted
+
+Multi-process scale-out lives in ``repro.dsm.cluster``: per-worker object
+namespaces (``w<i>/...``), the multi-writer-safe manifest protocol (rank
+records + ONE elected cluster completeOp per step), and the spill-file
+staging area that makes the RStore peer-recovery path work across
+processes.
 """
 from repro.dsm.pool import DSMPool, PoolObject  # noqa: F401
 from repro.dsm.tiers import TierManager  # noqa: F401

@@ -1,0 +1,566 @@
+"""Multi-writer cluster protocol: N worker processes over ONE shared pool.
+
+The paper's setting is several hosts sharing one CXL pool, where a crash
+takes out a single host's caches and everything else keeps running.  This
+module is that setting at process scale — the pieces every scale-out layer
+(elastic training, sharded serving, multi-backend) stands on:
+
+* **per-worker namespaces** — rank *i* commits its objects as
+  ``w<i>/<name>`` (``rank_ns``), so N writers never collide on object
+  files; version counters per name are seeded from the shared pool
+  (``TierManager.lstore`` / ``DSMPool.max_version``), so even a rank's
+  torn leftovers are never overwritten;
+* **rank records + elected cluster completeOp** (``ClusterProtocol``) —
+  each rank's flush ends with an atomic *rank record*
+  (``records/g<gen>/s<step>/r<i>.json``) listing its objects' manifest
+  entries; the LAST rank to record sees the full set and commits ONE
+  cluster manifest referencing every rank's objects at that step.  The
+  manifest sequence number is reserved via O_EXCL
+  (``DSMPool.commit_manifest``), and at most one rank wins the per-step
+  O_EXCL commit marker, so concurrent committers never clobber a
+  completed commit;
+* **cross-process staging** (``FileStagingArea``) — the spill-file
+  realization of RStore's peer host buffer: rank *i* stages its state
+  into sibling ``(i+1) mod N``'s buffer directory on every step.  A
+  ``StagingProxy`` plugs into ``TierManager.rstore`` /
+  ``DurableCommitter(replicate_to=...)`` as the write side; a
+  ``view(...)`` is the read side that ``RecoveryManager.recover`` accepts
+  as a peer — so the peer-staging recovery path works ACROSS processes,
+  not just in-process.  The buffer is volatile by contract: the owner's
+  crash wipes it (the scenario runner deletes the victim's directory);
+* **membership + shrink plumbing** (``ControlPlane``,
+  ``ScalarReduceBoard``) — a lockstep all-reduce board doubles as the
+  failure detector: survivors blocked on a dead rank's contribution learn
+  the new membership from the control file and raise
+  ``MembershipChange``, which the worker loop turns into the elastic
+  shrink protocol (see ``repro.scenarios.cluster_worker``).
+
+Recovery-source precedence for a victim's partition (same rule as
+single-worker recovery, now across processes): the sibling's staged copy
+wins iff its step tag is NEWER than the newest cluster manifest that
+references the victim's objects; otherwise the pool wins — and if the
+pool's copy is older than the survivors' live step, every survivor rolls
+back to that manifest so the cluster never mixes steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import tempfile
+import time
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+
+from repro.dsm.pool import (DSMPool, _crc_of_arrays, decode_arrays,
+                            encode_arrays, manifest_entry)
+
+#: polling period of the file-based rendezvous primitives (seconds)
+POLL_S = 0.02
+
+
+def rank_ns(rank: int, name: str) -> str:
+    """The per-worker object namespace: ``w<i>/<name>``."""
+    return f"w{rank}/{name}"
+
+
+def ring_sibling(rank: int, live: Sequence[int]) -> int:
+    """The staging target of ``rank`` in the ring over the live rank set:
+    each rank RStore-stages its state into the next live rank's host
+    buffer, so any single crash leaves the victim's newest state in a
+    SURVIVOR's buffer."""
+    live = sorted(live)
+    return live[(live.index(rank) + 1) % len(live)]
+
+
+class MembershipChange(Exception):
+    """Raised out of a blocking rendezvous when the control plane reports a
+    worker death: the caller must run the shrink protocol."""
+
+    def __init__(self, victim: int):
+        super().__init__(f"worker {victim} left the cluster")
+        self.victim = victim
+
+
+def _atomic_json(path: str, doc: dict):
+    """Write-fsync-rename, same discipline as every other durable file."""
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path))
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(doc, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
+def _read_json(path: str) -> Optional[dict]:
+    """None on missing OR torn (a concurrent writer's rename not yet
+    visible / a reader outracing the replace) — callers poll."""
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return None
+
+
+def _prune_gen_step_dirs(root: str, gen: int, step: int):
+    """Remove ``g<j>/`` trees of stale generations (j < gen) and
+    ``g<gen>/s<k>/`` subtrees of superseded steps (k < step) — the shared
+    bounded-growth sweep of the record and all-reduce directories.
+    rmtree races between concurrent pruners are harmless."""
+    if not os.path.isdir(root):
+        return
+    for gdir in os.listdir(root):
+        g = gdir[1:]
+        if not (gdir.startswith("g") and g.isdigit()):
+            continue
+        if int(g) < gen:
+            shutil.rmtree(os.path.join(root, gdir), ignore_errors=True)
+            continue
+        if int(g) != gen:
+            continue
+        for sdir in os.listdir(os.path.join(root, gdir)):
+            s = sdir[1:]
+            if (sdir.startswith("s") and s.lstrip("-").isdigit()
+                    and int(s) < step):
+                shutil.rmtree(os.path.join(root, gdir, sdir),
+                              ignore_errors=True)
+
+
+# ---------------------------------------------------------------------------
+# control plane: membership changes
+# ---------------------------------------------------------------------------
+
+class ControlPlane:
+    """One shared control file announcing membership changes.
+
+    * planned shrink (elastic scale-down): posted BEFORE the run by the
+      launcher — ``{"victim": v, "at_step": s, "planned": true}``; every
+      rank executes the planned shrink at the top of step ``s``;
+    * crash shrink: posted by the orchestrator AFTER it observes a worker
+      death — ``{"victim": v, "planned": false}``; survivors notice while
+      blocked on the dead rank in a rendezvous.
+    """
+
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        self.path = os.path.join(root, "shrink.json")
+
+    def post(self, victim: int, *, planned: bool = False,
+             at_step: Optional[int] = None):
+        _atomic_json(self.path, {"victim": victim, "planned": planned,
+                                 "at_step": at_step})
+
+    def read(self) -> Optional[dict]:
+        return _read_json(self.path)
+
+    def check_crash(self, live: Sequence[int]):
+        """Raise MembershipChange if a CRASH shrink affecting ``live`` has
+        been posted (planned shrinks are handled at step boundaries, not
+        mid-rendezvous)."""
+        doc = self.read()
+        if doc and not doc.get("planned") and doc["victim"] in live:
+            raise MembershipChange(doc["victim"])
+
+    # shrink rendezvous: the adopter publishes the recovery decision ------
+    def post_shrink_result(self, gen: int, doc: dict):
+        _atomic_json(os.path.join(self.root, f"shrink_g{gen}.json"), doc)
+
+    def wait_shrink_result(self, gen: int, *, timeout: float = 120.0) -> dict:
+        deadline = time.monotonic() + timeout
+        path = os.path.join(self.root, f"shrink_g{gen}.json")
+        while True:
+            doc = _read_json(path)
+            if doc is not None:
+                return doc
+            if time.monotonic() > deadline:
+                raise TimeoutError(f"no shrink result for gen {gen}")
+            time.sleep(POLL_S)
+
+
+# ---------------------------------------------------------------------------
+# lockstep scalar all-reduce (the data-parallel gradient combine)
+# ---------------------------------------------------------------------------
+
+class ScalarReduceBoard:
+    """File-based all-reduce of one scalar per (generation, step, rank).
+
+    Bit-exact: contributions are written as ``float.hex()`` and summed in
+    sorted-rank order, so every rank computes the identical float64 — and
+    a re-run with the same membership history reproduces it exactly.
+    Keyed by generation so contributions from before a shrink can never
+    leak into the re-executed step after it.  ``combine`` doubles as the
+    failure detector: while blocked on a missing contribution it polls the
+    control plane and raises ``MembershipChange`` when a death is posted.
+    """
+
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+
+    def _path(self, gen: int, step: int, rank: int) -> str:
+        return os.path.join(self.root, f"g{gen}", f"s{step}",
+                            f"r{rank}.json")
+
+    def contribute(self, gen: int, step: int, rank: int, value: float):
+        _atomic_json(self._path(gen, step, rank),
+                     {"v": float(value).hex()})
+
+    def combine(self, gen: int, step: int, ranks: Sequence[int], *,
+                control: Optional[ControlPlane] = None,
+                timeout: float = 120.0) -> float:
+        ranks = sorted(ranks)
+        deadline = time.monotonic() + timeout
+        while True:
+            vals = {}
+            for r in ranks:
+                doc = _read_json(self._path(gen, step, r))
+                if doc is None:
+                    break
+                vals[r] = float.fromhex(doc["v"])
+            if len(vals) == len(ranks):
+                total = 0.0
+                for r in ranks:         # fixed order -> bit-exact
+                    total += vals[r]
+                # every rank has contributed to `step`, so every rank is
+                # past combine(step - 1) — older dirs are dead weight
+                _prune_gen_step_dirs(self.root, gen, step)
+                return total
+            if control is not None:
+                control.check_crash(ranks)
+            if time.monotonic() > deadline:
+                raise TimeoutError(
+                    f"all-reduce g{gen}/s{step}: missing "
+                    f"{sorted(set(ranks) - set(vals))}")
+            time.sleep(POLL_S)
+
+
+# ---------------------------------------------------------------------------
+# cross-process RStore staging (the peer host buffer as spill files)
+# ---------------------------------------------------------------------------
+
+def _mangle(name: str) -> str:
+    return name.replace("/", "__")
+
+
+class _StagingBuffer:
+    """The write side of one worker's host buffer: a mapping facade whose
+    ``buf[name] = (tag, tree)`` writes the staged copy through to spill
+    files.  Payload and meta are two atomic renames, so a crash between
+    them CAN leave the previous meta next to a new payload — the meta
+    therefore carries a CRC of the payload it describes, and ``view``
+    discards any pair that does not match (recovery then falls back to
+    the pool, never adopts a mislabeled copy)."""
+
+    def __init__(self, path: str):
+        self.path = path
+
+    def __setitem__(self, name: str, value: Tuple[int, Any]):
+        tag, tree = value
+        try:
+            os.makedirs(self.path, exist_ok=True)
+            leaves = [np.asarray(l)
+                      for l in jax.tree_util.tree_leaves(tree)]
+            raw, dtypes, shapes = encode_arrays(leaves)
+            base = os.path.join(self.path, _mangle(name))
+            fd, tmp = tempfile.mkstemp(dir=self.path)
+            try:
+                with os.fdopen(fd, "wb") as f:
+                    np.savez(f, **{f"a{i}": a for i, a in enumerate(raw)})
+                    f.flush()
+                    os.fsync(f.fileno())
+                os.replace(tmp, base + ".npz")
+            except BaseException:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+                raise
+            _atomic_json(base + ".json",
+                         {"name": name, "tag": int(tag), "n": len(leaves),
+                          "crc": _crc_of_arrays(leaves),
+                          "dtypes": dtypes, "shapes": shapes})
+        except FileNotFoundError:
+            # the buffer owner crashed and its volatile buffer was wiped
+            # out from under this store: an RStore into a dead peer's
+            # cache simply does not land — the crash semantics, not an
+            # error of ours
+            return
+
+
+@dataclasses.dataclass
+class StagingProxy:
+    """RStore target for a remote sibling: quacks like a TierManager as far
+    as ``rstore`` / ``DurableCommitter(replicate_to=...)`` care (exposes
+    ``.staging``), but lands the copy in the sibling's buffer directory."""
+    staging: _StagingBuffer
+
+
+@dataclasses.dataclass
+class StagedView:
+    """Read side, shaped exactly like a TierManager peer for
+    ``RecoveryManager.recover``: ``.staging = {name: (tag, host tree)}``."""
+    staging: Dict[str, Tuple[int, Any]]
+
+
+class FileStagingArea:
+    """Per-worker spill-file buffers emulating RStore's peer host memory.
+
+    ``root/w<i>/`` is worker *i*'s buffer: copies staged INTO it by peers.
+    It is volatile by contract — worker *i*'s crash loses it (the
+    orchestrator wipes the directory), exactly the CXL0 cache-loss model;
+    the copies OF worker *i* living in a sibling's buffer survive.
+    """
+
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+
+    def area(self, rank: int) -> str:
+        return os.path.join(self.root, f"w{rank}")
+
+    def proxy(self, rank: int) -> StagingProxy:
+        """Write INTO ``rank``'s buffer (the rstore/replicate_to target)."""
+        return StagingProxy(_StagingBuffer(self.area(rank)))
+
+    def view(self, rank: int, templates: Dict[str, Any]) -> StagedView:
+        """Read ``rank``'s OWN buffer: the staged copies this worker holds
+        for its peers, unflattened against ``templates`` (only requested
+        names are loaded).  Torn, missing, or meta/payload-mismatched
+        entries (CRC check) are simply absent — recovery then falls back
+        to the pool."""
+        staged: Dict[str, Tuple[int, Any]] = {}
+        for name, template in templates.items():
+            base = os.path.join(self.area(rank), _mangle(name))
+            meta = _read_json(base + ".json")
+            if meta is None:
+                continue
+            try:
+                with np.load(base + ".npz") as z:
+                    arrays = [z[f"a{i}"] for i in range(meta["n"])]
+                arrays = decode_arrays(arrays, meta["dtypes"],
+                                       meta["shapes"])
+            except Exception:
+                continue            # torn spill: not a usable copy
+            if _crc_of_arrays(arrays) != meta.get("crc"):
+                continue    # writer died between payload and meta renames:
+                #             this meta describes a DIFFERENT payload
+            _, treedef = jax.tree_util.tree_flatten(template)
+            staged[name] = (meta["tag"],
+                            jax.tree_util.tree_unflatten(treedef, arrays))
+        return StagedView(staged)
+
+    def wipe(self, rank: int):
+        """Worker ``rank`` crashed: its host buffer is gone."""
+        shutil.rmtree(self.area(rank), ignore_errors=True)
+
+
+# ---------------------------------------------------------------------------
+# rank records + elected cluster completeOp
+# ---------------------------------------------------------------------------
+
+class ClusterProtocol:
+    """Per-rank handle for the multi-writer commit protocol over one pool.
+
+    A cluster commit of step ``s`` (generation ``g``)::
+
+        every rank:   flush its w<i>/ objects (any schedule)
+                      -> atomic rank record records/g<g>/s<s>/r<i>.json
+        last to record (sees all N records, wins the O_EXCL marker):
+                      -> ONE cluster manifest referencing every rank's
+                         objects at step s  (completeOp)
+
+    ``cluster_complete`` is shaped as a ``DurableCommitter`` complete_fn,
+    so each rank's committer keeps its schedules, shard pipelines and
+    fault-injection hooks and only the completeOp changes.  With
+    ``confirm=True`` the call additionally blocks until the cluster
+    manifest for the step is visible — used by the fault-injected victim
+    (so a ``post_completeOp`` kill really is after the CLUSTER commit) and
+    by the shrink/final barrier commits.
+    """
+
+    def __init__(self, pool: DSMPool, rank: int, live: Sequence[int], *,
+                 gen: int = 0, confirm: bool = False,
+                 retention: Optional[int] = None,
+                 timeout: float = 120.0):
+        self.pool = pool
+        self.rank = rank
+        self.live = sorted(live)
+        self.gen = gen
+        self.confirm = confirm
+        #: manifests kept by the ELECTED committer's post-commit gc.
+        #: Running gc from the winner right after its commit is the one
+        #: multi-writer-safe point: every live rank's objects for this
+        #: step are already referenced by the manifest just committed, and
+        #: the lockstep all-reduce bounds rank skew to one step, so no
+        #: rank can have flushed objects for a LATER commit yet.
+        self.retention = retention
+        self.timeout = timeout
+        self.records_root = os.path.join(pool.path, "records")
+        #: filename -> parsed manifest doc.  Manifest files are immutable
+        #: once their rename made them parseable, so successful parses can
+        #: be cached — the polling paths (wait_manifest) then cost
+        #: O(listdir + unseen files) instead of re-parsing every manifest
+        #: in the pool every 20 ms.
+        self._manifest_cache: Dict[str, dict] = {}
+
+    def set_membership(self, gen: int, live: Sequence[int]):
+        self.gen = gen
+        self.live = sorted(live)
+
+    # -- rank records --------------------------------------------------------
+    def _rec_dir(self, step: int) -> str:
+        return os.path.join(self.records_root, f"g{self.gen}", f"s{step}")
+
+    def write_record(self, step: int, entries: Dict[str, dict]):
+        _atomic_json(os.path.join(self._rec_dir(step),
+                                  f"r{self.rank}.json"),
+                     {"rank": self.rank, "objects": entries})
+
+    def read_records(self, step: int) -> Optional[Dict[str, dict]]:
+        """Merged object entries of EVERY live rank's record for ``step``,
+        or None while any record is still missing."""
+        merged: Dict[str, dict] = {}
+        for r in self.live:
+            doc = _read_json(os.path.join(self._rec_dir(step),
+                                          f"r{r}.json"))
+            if doc is None:
+                return None
+            merged.update(doc["objects"])
+        return merged
+
+    # -- the elected completeOp ---------------------------------------------
+    def _win_commit_marker(self, step: int) -> bool:
+        """At most one rank per (gen, step) performs the completeOp — the
+        O_EXCL marker makes the election atomic, so a stalled also-ran can
+        never rename a DUPLICATE manifest for an old step after newer
+        steps committed."""
+        try:
+            fd = os.open(os.path.join(self._rec_dir(step), ".commit"),
+                         os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+        except FileExistsError:
+            return False
+        os.close(fd)
+        return True
+
+    def meta_for(self, **extra) -> dict:
+        doc = {"kind": "cluster", "gen": self.gen, "live": self.live}
+        doc.update(extra)
+        return doc
+
+    def _manifests_desc(self) -> list:
+        """Like ``pool.manifests_desc`` but with the immutable-parse cache
+        (see ``_manifest_cache``); entries for deleted files are dropped."""
+        docs, seen = [], set()
+        for fn in os.listdir(self.pool.path):
+            if not (fn.startswith("manifest.") and fn.endswith(".json")):
+                continue
+            mid = fn[len("manifest."):-len(".json")]
+            if not mid.isdigit():
+                continue
+            seen.add(fn)
+            doc = self._manifest_cache.get(fn)
+            if doc is None:
+                doc = _read_json(os.path.join(self.pool.path, fn))
+                if doc is None:
+                    continue        # reservation still empty: poll again
+                self._manifest_cache[fn] = doc
+            docs.append(doc)
+        for fn in list(self._manifest_cache):
+            if fn not in seen:      # gc'd manifest
+                del self._manifest_cache[fn]
+        return sorted(docs, key=lambda d: (-d["step"], -d["seq"]))
+
+    def find_manifest(self, step: int,
+                      gen: Optional[int] = None) -> Optional[dict]:
+        """Newest cluster manifest for ``step`` (optionally of one
+        generation)."""
+        for m in self._manifests_desc():
+            if m["step"] != step:
+                continue
+            if gen is not None and m["meta"].get("gen") != gen:
+                continue
+            return m
+        return None
+
+    def wait_manifest(self, step: int, *,
+                      control: Optional[ControlPlane] = None) -> dict:
+        """Block until the cluster manifest for ``step`` is visible.
+
+        Failover: if the marker winner died between winning the election
+        and renaming the manifest, nobody would ever commit — so after a
+        grace period any waiter whose record set is complete commits
+        DIRECTLY, bypassing the marker.  The worst case is a duplicate
+        manifest for the same step with identical content (merged from
+        the same records), which is benign: seq numbers are reserved
+        atomically and readers order by (step, seq)."""
+        deadline = time.monotonic() + self.timeout
+        takeover_at = time.monotonic() + min(5.0, self.timeout / 4)
+        while True:
+            m = self.find_manifest(step, gen=self.gen)
+            if m is not None:
+                return m
+            if control is not None:
+                control.check_crash(self.live)
+            now = time.monotonic()
+            if now > takeover_at:
+                takeover_at = float("inf")
+                merged = self.read_records(step)
+                if merged is not None:
+                    self.pool.commit_manifest(step, merged,
+                                              self.meta_for())
+                    self._prune_records(step)
+                    if self.retention:
+                        self.pool.gc(keep=self.retention)
+                    continue        # our own commit is now findable
+            if now > deadline:
+                raise TimeoutError(
+                    f"cluster manifest g{self.gen}/s{step} never appeared")
+            time.sleep(POLL_S)
+
+    def _prune_records(self, step: int):
+        """Drop record dirs of committed-and-superseded steps (and stale
+        generations) so a long run does not accumulate one dir per step
+        forever — the same pathology gc's emptied-object-dir cleanup
+        removes.  Lockstep guarantees no live rank still needs a record
+        for a step older than the one just committed; a straggler's
+        re-created dir is a harmless orphan swept by the next commit."""
+        _prune_gen_step_dirs(self.records_root, self.gen, step)
+
+    def try_commit(self, step: int, meta: Optional[dict] = None) -> int:
+        """Commit the cluster manifest for ``step`` iff every live rank has
+        recorded AND this rank wins the commit marker.  Returns the new
+        manifest seq, or -1 when someone else is (or will be) the
+        committer."""
+        merged = self.read_records(step)
+        if merged is None or not self._win_commit_marker(step):
+            return -1
+        seq = self.pool.commit_manifest(step, merged,
+                                        meta or self.meta_for())
+        self._prune_records(step)
+        if self.retention:
+            self.pool.gc(keep=self.retention)
+        return seq
+
+    def cluster_complete(self, step: int, written: Dict[str, Any],
+                         meta: Optional[dict] = None) -> int:
+        """The DurableCommitter ``complete_fn``: rank record + elected
+        cluster commit (+ confirmation barrier when configured)."""
+        entries = {name: manifest_entry(o) for name, o in written.items()}
+        self.write_record(step, entries)
+        seq = self.try_commit(step, meta)
+        if self.confirm:
+            seq = self.wait_manifest(step)["seq"]
+        return seq

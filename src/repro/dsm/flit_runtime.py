@@ -87,17 +87,30 @@ def auto_shard_count(total_bytes: int, *,
 
 class DurableCommitter:
     def __init__(self, tiers: TierManager, *, mode: str = "sync",
-                 replicate_to: Optional[TierManager] = None,
+                 replicate_to: Optional[Any] = None,
                  n_shards: Optional[int] = None,
                  retention: Optional[int] = None,
-                 fault_hook: Optional[Callable[[str, int], None]] = None):
+                 fault_hook: Optional[Callable[[str, int], None]] = None,
+                 complete_fn: Optional[
+                     Callable[[int, Dict[str, Any], Optional[dict]],
+                              int]] = None):
         assert mode in COMMIT_MODES, mode
         self.tiers = tiers
         self.mode = mode
-        self.replicate_to = replicate_to     # peer for RStore staging
+        self.replicate_to = replicate_to     # peer for RStore staging (a
+        #                                      TierManager or any object
+        #                                      with a .staging mapping, e.g.
+        #                                      a cluster StagingProxy)
         self.n_shards = n_shards or None     # None = auto at first commit
         self.retention = retention
         self.fault_hook = fault_hook
+        #: delegated completeOp: ``complete_fn(step, written, meta) -> seq``
+        #: replaces the default single-writer ``pool.commit_manifest``.
+        #: The cluster protocol (repro.dsm.cluster) uses this to turn a
+        #: rank's flush into a rank-record + elected CLUSTER manifest
+        #: commit; the flush machinery (schedules, shard pipelines, fault
+        #: hooks) is reused unchanged.
+        self.complete_fn = complete_fn
         #: (step, object names, meta) of the in-flight async commit.  meta
         #: is captured at LAUNCH so the manifest always describes the state
         #: that was actually flushed — a later commit's meta (e.g. a newer
@@ -121,9 +134,18 @@ class DurableCommitter:
 
     def _complete_op(self, step: int, written: Dict[str, Any],
                      meta, t0, label: str) -> CommitStats:
-        """completeOp = atomic manifest rename, then retention GC."""
-        seq = self.tiers.pool.commit_manifest(step, written, meta)
-        if self.retention is not None:
+        """completeOp = atomic manifest rename (or the delegated
+        cluster-level completeOp), then retention GC."""
+        if self.complete_fn is not None:
+            seq = self.complete_fn(step, written, meta)
+        else:
+            seq = self.tiers.pool.commit_manifest(step, written, meta)
+        # retention GC only in the single-committer configuration:
+        # pool.gc deletes every version no kept manifest references, so
+        # running it from one rank of a multi-writer pool would delete a
+        # concurrent rank's flushed-but-not-yet-committed objects.  With a
+        # delegated completeOp, retention is the cluster layer's job.
+        if self.retention is not None and self.complete_fn is None:
             self.tiers.pool.gc(keep=self.retention)
         st = CommitStats(step, seq, len(written),
                          sum(o.nbytes for o in written.values()),

@@ -19,6 +19,18 @@ bit-flipped shard fails validation and recovery falls back to the previous
 manifest — the recovered state is always SOME completed commit (never torn),
 which is exactly durable linearizability of the step history.
 
+Multi-writer safety: a pool is a SHARED resource — several worker
+processes (the cluster protocol, ``repro.dsm.cluster``) or a restarted
+incarnation of the same committer may commit concurrently.
+``commit_manifest`` therefore reserves its sequence number atomically: it
+``O_EXCL``-creates ``manifest.<n>.json`` (re-scanning and retrying on
+``FileExistsError``) and only then atomically renames the full document
+over the reservation.  A reservation whose writer died before the rename
+is an unparseable (empty) file that every reader skips; no completed
+commit is ever overwritten.  Object names may be namespaced with ``/``
+(the cluster protocol uses ``w<i>/<name>`` per worker); nested
+directories are handled by ``max_version`` and ``gc``.
+
 Sharded writes (the sharded/sharded-async commit schedules): a pytree's
 leaves are partitioned into ``n_shards`` byte-balanced groups
 (``partition_leaves``) and each group is written — usually in parallel, one
@@ -87,6 +99,18 @@ def manifest_entry(obj) -> dict:
     return dict(obj)
 
 
+def shard_family(name: str) -> str:
+    """The logical object a (possibly shard) name belongs to:
+    ``params.s3`` -> ``params``, anything else unchanged.  gc's in-flight
+    watermark is per FAMILY, because one committer may write an object
+    plain while another manifest references it sharded (or with a
+    different shard count) — they share one version counter."""
+    base, dot, suffix = name.rpartition(".s")
+    if dot and suffix.isdigit():
+        return base
+    return name
+
+
 def partition_leaves(nbytes: List[int], n_shards: int) -> List[List[int]]:
     """Byte-balanced partition of leaf indices into ``<= n_shards`` groups
     (greedy: biggest leaf onto the lightest shard).  Never returns an empty
@@ -128,6 +152,29 @@ _NATIVE_DTYPES = {
 }
 
 
+def encode_arrays(arrays: List[np.ndarray]
+                  ) -> Tuple[List[np.ndarray], List[str], List[List[int]]]:
+    """npz cannot round-trip ml_dtypes (bfloat16 etc.): return raw uint8
+    views for non-native dtypes plus the (dtype, shape) sidecar data needed
+    to reverse the view on read.  Shared by the pool write path and the
+    cross-process staging area (``repro.dsm.cluster``)."""
+    dtypes = [str(a.dtype) for a in arrays]
+    raw = [np.ascontiguousarray(a).view(np.uint8)
+           if d not in _NATIVE_DTYPES else a
+           for a, d in zip(arrays, dtypes)]
+    shapes = [list(a.shape) for a in arrays]
+    return raw, dtypes, shapes
+
+
+def decode_arrays(arrays: List[np.ndarray], dtypes: List[str],
+                  shapes: List[List[int]]) -> List[np.ndarray]:
+    """Reverse of ``encode_arrays``."""
+    import ml_dtypes  # noqa: F401  (registers bfloat16 et al.)
+    return [a if d in _NATIVE_DTYPES
+            else a.view(np.dtype(d)).reshape(shape)
+            for a, d, shape in zip(arrays, dtypes, shapes)]
+
+
 class DSMPool:
     def __init__(self, path: str):
         self.path = path
@@ -147,15 +194,15 @@ class DSMPool:
         arrays, treedef = _flatten(tree)
         crc = _crc_of_arrays(arrays)
         base = self._obj_path(name, version)
-        tmp_fd, tmp_name = tempfile.mkstemp(dir=os.path.dirname(base))
+        try:
+            tmp_fd, tmp_name = tempfile.mkstemp(dir=os.path.dirname(base))
+        except FileNotFoundError:
+            # a concurrent gc() rmdir'd the (momentarily empty) object dir
+            # between our makedirs and mkstemp — recreate and retry once
+            os.makedirs(os.path.dirname(base), exist_ok=True)
+            tmp_fd, tmp_name = tempfile.mkstemp(dir=os.path.dirname(base))
         os.close(tmp_fd)
-        # npz cannot round-trip ml_dtypes (bfloat16 etc.): store a raw view
-        # and record the true dtype in the sidecar
-        dtypes = [str(a.dtype) for a in arrays]
-        raw = [np.ascontiguousarray(a).view(np.uint8)
-               if d not in _NATIVE_DTYPES else a
-               for a, d in zip(arrays, dtypes)]
-        shapes = [list(a.shape) for a in arrays]
+        raw, dtypes, shapes = encode_arrays(arrays)
         with open(tmp_name, "wb") as f:
             np.savez(f, **{f"a{i}": a for i, a in enumerate(raw)})
             f.flush()
@@ -175,14 +222,23 @@ class DSMPool:
         """Highest version present on disk for ``name`` INCLUDING its shard
         objects (``name.s<k>``) and torn/unreferenced files.  A fresh worker
         incarnation seeds its version counter above this so it can never
-        overwrite a file an existing manifest still references."""
+        overwrite a file an existing manifest still references.  Handles
+        namespaced names (``w<i>/<name>``): the object dir and its shard
+        sibling dirs live under the namespace directory."""
         best = 0
-        prefix = name + ".s"
-        for d in os.listdir(self.obj_dir):
-            if d != name and not (d.startswith(prefix)
+        parent = os.path.dirname(os.path.join(self.obj_dir, name))
+        base = os.path.basename(name)
+        prefix = base + ".s"
+        if not os.path.isdir(parent):
+            return 0
+        for d in os.listdir(parent):
+            if d != base and not (d.startswith(prefix)
                                   and d[len(prefix):].isdigit()):
                 continue
-            for fn in os.listdir(os.path.join(self.obj_dir, d)):
+            p = os.path.join(parent, d)
+            if not os.path.isdir(p):
+                continue
+            for fn in os.listdir(p):
                 stem = fn.split(".")[0]
                 if stem.isdigit():
                     best = max(best, int(stem))
@@ -202,12 +258,7 @@ class DSMPool:
             with np.load(base + ".npz") as z:
                 arrays = [z[f"a{i}"] for i in range(meta["n"])]
             if "dtypes" in meta:
-                import ml_dtypes  # noqa: F401  (registers bfloat16 et al.)
-                arrays = [
-                    a if d in _NATIVE_DTYPES
-                    else a.view(np.dtype(d)).reshape(shape)
-                    for a, d, shape in zip(arrays, meta["dtypes"],
-                                           meta["shapes"])]
+                arrays = decode_arrays(arrays, meta["dtypes"], meta["shapes"])
         except (OSError, KeyError, ValueError, TypeError, EOFError,
                 zipfile.BadZipFile, zlib.error) as e:
             raise CorruptObjectError(f"{name}@{version}: {e}") from e
@@ -230,34 +281,62 @@ class DSMPool:
                     best = max(best, int(mid))
         return best
 
+    def _reserve_manifest_seq(self) -> Tuple[int, str]:
+        """Atomically reserve the next manifest sequence number: O_EXCL
+        create of ``manifest.<n>.json`` at n = newest-on-disk + 1, re-scan
+        and retry on collision.  Two committers (concurrent workers, or a
+        restarted incarnation racing a stale one) can therefore never pick
+        the same n — the init-time cached ``_manifest_seq`` is only a hint
+        and is NEVER trusted for the reservation."""
+        while True:
+            seq = max(self._latest_manifest_seq(), self._manifest_seq) + 1
+            dst = os.path.join(self.path, f"manifest.{seq}.json")
+            try:
+                fd = os.open(dst, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+            except FileExistsError:
+                self._manifest_seq = seq    # lost the race: scan past it
+                continue
+            os.close(fd)
+            return seq, dst
+
     def commit_manifest(self, step: int, objects: Dict[str, Any],
                         meta: Optional[dict] = None) -> int:
-        """Atomic commit: the step is durable iff this rename completed.
-        ``objects`` values may be PoolObject (plain) or ShardedObject."""
-        self._manifest_seq += 1
+        """Atomic commit: the step is durable iff the full manifest document
+        replaced its reservation.  ``objects`` values may be PoolObject
+        (plain), ShardedObject, or ready-made manifest-entry dicts.
+
+        Multi-writer safe: the sequence number is reserved via O_EXCL
+        create (see ``_reserve_manifest_seq``); the document is then
+        written to a temp file, fsync'd, and atomically renamed OVER the
+        reservation.  Readers either see the empty reservation (skipped as
+        unparseable) or the complete document — a concurrent or restarted
+        committer can never clobber a completed commit."""
+        seq, dst = self._reserve_manifest_seq()
+        self._manifest_seq = seq
         doc = {
-            "seq": self._manifest_seq,
+            "seq": seq,
             "step": step,
             "objects": {name: manifest_entry(o)
                         for name, o in objects.items()},
             "meta": meta or {},
         }
-        tmp = os.path.join(self.path, f".manifest.tmp.{self._manifest_seq}")
+        tmp = os.path.join(self.path, f".manifest.tmp.{seq}")
         with open(tmp, "w") as f:
             json.dump(doc, f)
             f.flush()
             os.fsync(f.fileno())
-        dst = os.path.join(self.path, f"manifest.{self._manifest_seq}.json")
         os.replace(tmp, dst)
-        # update the convenience head pointer last (also atomic)
+        # update the convenience head pointer last (also atomic; with
+        # concurrent committers last-writer-wins — readers that need the
+        # true newest manifest use manifests_desc())
         head = os.path.join(self.path, "manifest.json")
-        tmp2 = os.path.join(self.path, ".manifest.head.tmp")
+        tmp2 = os.path.join(self.path, f".manifest.head.tmp.{seq}")
         with open(tmp2, "w") as f:
             json.dump(doc, f)
             f.flush()
             os.fsync(f.fileno())
         os.replace(tmp2, head)
-        return self._manifest_seq
+        return seq
 
     def read_entry(self, name: str, entry: dict, treedef_like) -> Any:
         """Read + validate one manifest entry, plain or sharded, checking
@@ -288,7 +367,13 @@ class DSMPool:
         return jax.tree_util.tree_unflatten(treedef, leaves)
 
     def manifests_desc(self) -> List[dict]:
-        """All manifests, newest first."""
+        """All manifests, newest first — ordered by (step, seq), so logical
+        time dominates.  With a single committer seq order IS step order;
+        with concurrent committers a straggler may rename a manifest for an
+        older step after a newer step's manifest landed (its seq is higher
+        but its step is older), and recovery must still prefer the newest
+        STEP.  Unparseable files (reservations whose writer died before the
+        rename) are skipped."""
         out = []
         for fn in os.listdir(self.path):
             if fn.startswith("manifest.") and fn.endswith(".json"):
@@ -300,7 +385,7 @@ class DSMPool:
                         out.append(json.load(f))
                 except (OSError, ValueError):
                     continue
-        return sorted(out, key=lambda d: -d["seq"])
+        return sorted(out, key=lambda d: (-d["step"], -d["seq"]))
 
     def latest_manifest(self) -> Optional[dict]:
         ms = self.manifests_desc()
@@ -310,33 +395,93 @@ class DSMPool:
         """Drop all but the newest ``keep`` manifests + unreferenced
         versions (the committer's retention policy calls this after every
         completeOp).  Handles sharded entries (every referenced shard stays
-        live) and skips files it cannot parse — e.g. tempfiles left by an
-        incarnation that crashed mid-write — rather than aborting."""
+        live), namespaced objects (``w<i>/<name>`` — the walk is
+        recursive), and skips files it cannot parse — e.g. tempfiles left
+        by an incarnation that crashed mid-write — rather than aborting.
+
+        Emptied object directories are removed: a long-lived pool that
+        retires objects (e.g. serving's ``kv/<rid>`` with ``--retire-done``)
+        must not accumulate thousands of stale ``objects/<name>/`` dirs
+        forever.  A dir holding a tempfile of an in-flight write is not
+        empty, so rmdir (which fails on non-empty dirs) never races a
+        completed write; the one-in-a-million makedirs/mkstemp window is
+        covered by write_object's retry.
+
+        Dead manifest reservations (unparseable ``manifest.<n>.json`` whose
+        writer crashed between reserve and rename) older than every kept
+        manifest are deleted too — they can never become valid.
+
+        Multi-writer tolerance: version counters are monotone per object
+        (seeded above the on-disk max), so an unreferenced version NEWER
+        than the newest kept reference of its object may be a concurrent
+        writer's flushed-but-not-yet-committed file — gc never deletes
+        those (once a later manifest references a higher version, a
+        genuinely dead one falls behind the watermark and is collected).
+        Versions of an object no kept manifest mentions at all are
+        retired (e.g. a finished serving session's ``kv/<rid>``) and are
+        deleted entirely, directory included."""
         keep = max(1, keep)
         ms = self.manifests_desc()
         keep_ms, drop_ms = ms[:keep], ms[keep:]
         live = set()
+        #: family -> newest version any kept manifest references (the
+        #: in-flight watermark; plain and sharded writes of one object
+        #: share a version counter, so the family is the right key)
+        watermark: Dict[str, int] = {}
+
+        def _mark(name: str, version: int):
+            fam = shard_family(name)
+            watermark[fam] = max(watermark.get(fam, 0), version)
+
         for m in keep_ms:
             for n, o in m["objects"].items():
                 if o.get("sharded"):
-                    live.update((s["name"], s["version"])
-                                for s in o["shards"])
+                    for s in o["shards"]:
+                        live.add((s["name"], s["version"]))
+                        _mark(s["name"], s["version"])
                 else:
                     live.add((n, o["version"]))
+                    _mark(n, o["version"])
         for m in drop_ms:
             try:
                 os.unlink(os.path.join(self.path,
                                        f"manifest.{m['seq']}.json"))
             except OSError:
                 pass
-        for name in os.listdir(self.obj_dir):
-            d = os.path.join(self.obj_dir, name)
-            for fn in os.listdir(d):
+        if keep_ms:
+            min_kept = min(m["seq"] for m in keep_ms)
+            parsed = {m["seq"] for m in ms}
+            for fn in os.listdir(self.path):
+                if not (fn.startswith("manifest.") and fn.endswith(".json")):
+                    continue
+                mid = fn[len("manifest."):-len(".json")]
+                if mid.isdigit() and int(mid) < min_kept \
+                        and int(mid) not in parsed:
+                    try:
+                        os.unlink(os.path.join(self.path, fn))
+                    except OSError:
+                        pass
+        for dirpath, dirnames, filenames in os.walk(self.obj_dir,
+                                                    topdown=False):
+            name = os.path.relpath(dirpath, self.obj_dir).replace(os.sep, "/")
+            for fn in filenames:
                 stem = fn.split(".")[0]
                 if not stem.isdigit():
                     continue        # tempfile from a crashed write
-                if (name, int(stem)) not in live:
-                    try:
-                        os.unlink(os.path.join(d, fn))
-                    except OSError:
-                        pass
+                v = int(stem)
+                if (name, v) in live:
+                    continue
+                fam = shard_family(name)
+                if fam in watermark and v > watermark[fam]:
+                    continue    # newer than every kept reference of this
+                    #             object: may be a concurrent writer's
+                    #             in-flight commit
+                try:
+                    os.unlink(os.path.join(dirpath, fn))
+                except OSError:
+                    pass
+            if dirpath != self.obj_dir:
+                try:
+                    os.rmdir(dirpath)       # fails (harmlessly) if non-empty
+                except OSError:
+                    pass

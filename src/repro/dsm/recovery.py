@@ -4,7 +4,10 @@ A worker crash loses its HBM and host-staging tiers; the pool and OTHER
 workers are uninterrupted.  Recovery sources, best first:
 
 1. **peer staging** — if a surviving peer holds an RStore-staged copy NEWER
-   than the pool's manifest (CXL0 cache-to-cache propagation), adopt it;
+   than the pool's manifest (CXL0 cache-to-cache propagation), adopt it.
+   The peer may be an in-process ``TierManager`` or a cross-process
+   staging view (``repro.dsm.cluster.FileStagingArea``) — anything with a
+   ``.staging`` mapping of ``name -> (tag, host tree)``;
 2. **pool manifest** — newest manifest whose every object CRC-validates;
    torn/corrupt shards trigger fallback to the previous manifest.  Works
    for plain AND sharded manifest entries: a sharded object validates only
@@ -17,7 +20,6 @@ from __future__ import annotations
 from typing import Any, Callable, Dict, Optional, Tuple
 
 from repro.dsm.pool import CorruptObjectError, DSMPool
-from repro.dsm.tiers import TierManager
 
 
 class CrashError(Exception):
@@ -36,18 +38,35 @@ class RecoveryManager:
     def __init__(self, pool: DSMPool):
         self.pool = pool
 
-    def recover_from_pool(self, templates: Dict[str, Any]
+    def recover_from_pool(self, templates: Dict[str, Any], *,
+                          exact: bool = True
                           ) -> Optional[Tuple[Dict[str, Any], int, int]]:
-        """Newest fully-valid manifest -> (objects, step, seq)."""
+        """Newest fully-valid manifest -> (objects, step, seq).
+
+        ``exact=True`` (default): the manifest's object set must equal the
+        template set — the whole-state recovery of the training loop.
+        ``exact=False``: the manifest may contain MORE objects than asked
+        for (subset recovery) — e.g. a surviving cluster worker recovering
+        only the victim rank's ``w<v>/...`` objects out of a cluster
+        manifest that references every rank's."""
         for m in self.pool.manifests_desc():
+            entries = m["objects"]
+            if exact and set(entries) != set(templates):
+                continue
+            if not set(templates) <= set(entries):
+                continue
             try:
                 objs = {
-                    name: self.pool.read_entry(name, o, templates[name])
-                    for name, o in m["objects"].items()}
-            except (CorruptObjectError, KeyError):
-                continue            # torn commit: fall back to older manifest
-            if set(objs) == set(templates):
-                return objs, m["step"], m["seq"]
+                    name: self.pool.read_entry(name, entries[name],
+                                               templates[name])
+                    for name in templates}
+            except (CorruptObjectError, KeyError, ValueError):
+                # torn commit, or an object whose pytree structure no
+                # longer matches the template (e.g. a pre-shrink manifest
+                # read with post-repartition templates — tree_unflatten
+                # raises ValueError): fall back to an older manifest
+                continue
+            return objs, m["step"], m["seq"]
         return None
 
     def recover_latest(self, template_for: Callable[[str, dict], Any]
@@ -68,33 +87,41 @@ class RecoveryManager:
                     name: self.pool.read_entry(
                         name, entry, template_for(name, entry))
                     for name, entry in m["objects"].items()}
-            except (CorruptObjectError, KeyError):
-                continue            # torn commit: fall back to older manifest
+            except (CorruptObjectError, KeyError, ValueError):
+                continue            # torn commit (or template/structure
+                #                     mismatch): fall back to older manifest
             return objs, m
         return None
 
     def recover(self, templates: Dict[str, Any],
-                peers: Tuple[TierManager, ...] = (),
+                peers: Tuple[Any, ...] = (), *,
+                exact: bool = True,
                 ) -> Tuple[Dict[str, Any], int, str]:
         """Full recovery path: peer staging beats the pool if newer.
 
         ``templates``: pytree prototypes (for unflattening) per object.
-        Peer staging is only adopted if it covers ALL objects at one
-        consistent version (else it could mix steps — not linearizable).
-        """
-        pool_state = self.recover_from_pool(templates)
+        ``peers``: anything exposing a ``.staging`` mapping of
+        ``name -> (tag, host tree)`` — an in-process TierManager, or a
+        cross-process ``FileStagingArea.view(...)`` (repro.dsm.cluster)
+        backed by a sibling worker's spill-file buffer.  Peer staging is
+        only adopted if it covers ALL requested objects at one consistent
+        version (else it could mix steps — not linearizable).
+        ``exact=False`` allows subset recovery from the pool (see
+        ``recover_from_pool``)."""
+        pool_state = self.recover_from_pool(templates, exact=exact)
         best_peer: Optional[Dict[str, Any]] = None
         best_ver = -1
         for peer in peers:
-            if set(peer.staging) != set(templates):
+            if not set(templates) <= set(peer.staging):
                 continue
-            vers = {v for v, _ in peer.staging.values()}
+            staged = {n: peer.staging[n] for n in templates}
+            vers = {v for v, _ in staged.values()}
             if len(vers) != 1:      # mixed-step staging: not consistent
                 continue
             v = vers.pop()
             if v > best_ver:
                 best_ver = v
-                best_peer = {n: t for n, (_, t) in peer.staging.items()}
+                best_peer = {n: t for n, (_, t) in staged.items()}
         if pool_state is None and best_peer is None:
             raise ColdStartError("no recoverable state (cold start)")
         if best_peer is not None:

@@ -52,6 +52,7 @@ class TierManager:
         self.flit_counter: Dict[str, int] = {}
         self._flush_threads: Dict[str, threading.Thread] = {}
         self._flush_results: Dict[str, PoolObject] = {}
+        self._flush_errors: Dict[str, BaseException] = {}
         #   name -> (version, n_leaves, assignment, shard futures)
         self._sharded_futures: Dict[
             str, Tuple[int, int, List[List[int]], List[Future]]] = {}
@@ -81,13 +82,16 @@ class TierManager:
             self.versions[name] = self.pool.max_version(name)
         self.versions[name] += 1
 
-    def rstore(self, name: str, peer: "TierManager",
+    def rstore(self, name: str, peer: Any,
                tag: Optional[int] = None):
         """Stage our current value into a peer's host buffer.  On our crash
         the peer still holds it (newer than the pool) — CXL0's
         cache-to-cache propagation made useful (peer-cache recovery).
         ``tag`` (training step) makes staged copies comparable with pool
-        manifests during recovery."""
+        manifests during recovery.  ``peer`` is anything exposing a
+        ``.staging`` mapping: an in-process TierManager, or a
+        cross-process ``StagingProxy`` (repro.dsm.cluster) that writes
+        through to a sibling worker's spill-file buffer."""
         peer.staging[name] = (self.versions.get(name, 0) if tag is None
                               else tag, _to_host(self.hbm[name]))
 
@@ -146,7 +150,17 @@ class TierManager:
     def _shard_join(self, name: str, version: int, n_leaves: int,
                     assignment: List[List[int]],
                     futs: List[Future]) -> ShardedObject:
-        shards = [f.result() for f in futs]
+        """Join EVERY shard future (a failed shard must not leave later
+        shards' writes in flight), then surface the first failure."""
+        shards, first_err = [], None
+        for f in futs:
+            try:
+                shards.append(f.result())
+            except BaseException as e:
+                if first_err is None:
+                    first_err = e
+        if first_err is not None:
+            raise first_err
         return ShardedObject(name, version,
                              sum(s.nbytes for s in shards),
                              n_leaves, shards, assignment)
@@ -183,10 +197,21 @@ class TierManager:
         host_copy = _to_host(self.hbm[name])       # snapshot NOW
 
         def work():
-            obj = self.pool.write_object(name, version, host_copy)
-            with self._lock:
-                self._flush_results[name] = obj
-                self.flit_counter[name] -= 1
+            # a failed write must surface at the join (flush_wait) AND the
+            # FliT counter must come back down either way — a leaked raised
+            # counter would make every later joiner think the pool copy is
+            # permanently stale
+            try:
+                obj = self.pool.write_object(name, version, host_copy)
+            except BaseException as e:
+                with self._lock:
+                    self._flush_errors[name] = e
+            else:
+                with self._lock:
+                    self._flush_results[name] = obj
+            finally:
+                with self._lock:
+                    self.flit_counter[name] -= 1
 
         t = threading.Thread(target=work, daemon=True)
         self._flush_threads[name] = t
@@ -194,7 +219,10 @@ class TierManager:
 
     def flush_wait(self, name: str):
         """Join one outstanding async flush (threaded or sharded); returns
-        the PoolObject / ShardedObject for the manifest."""
+        the PoolObject / ShardedObject for the manifest.  A write that
+        failed in the background re-raises its exception HERE — the commit
+        simply is not durable (no manifest); the caller decides whether to
+        retry or abort."""
         pending = self._sharded_futures.pop(name, None)
         if pending is not None:
             try:
@@ -205,6 +233,9 @@ class TierManager:
         if t is not None:
             t.join()
         with self._lock:
+            err = self._flush_errors.pop(name, None)
+            if err is not None:
+                raise err
             return self._flush_results.pop(name)
 
     def abort_flushes(self):
@@ -221,10 +252,12 @@ class TierManager:
             self.flit_counter[name] -= 1
         self._sharded_futures.clear()
         for name, t in list(self._flush_threads.items()):
-            t.join()
+            t.join()            # work()'s finally lowered the counter,
+        #                         whether the write landed or failed
         self._flush_threads.clear()
         with self._lock:
             self._flush_results.clear()
+            self._flush_errors.clear()
 
     def close(self):
         """Release the flush thread pool (idempotent; lazily recreated if
@@ -244,3 +277,4 @@ class TierManager:
         self.flit_counter.clear()
         self._flush_threads.clear()
         self._flush_results.clear()
+        self._flush_errors.clear()

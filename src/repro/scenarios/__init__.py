@@ -12,10 +12,19 @@ final state bit-identical to an uninterrupted reference run.
   continuous-batching engine whose session commits ride the same FliT
   path; kill + restart must replay every committed session with
   bit-identical output tokens;
+* ``repro.scenarios.cluster_worker`` — rank i of N data-parallel CLUSTER
+  processes sharing one pool through the multi-writer manifest protocol
+  (``repro.dsm.cluster``); killing one rank mid-commit makes the
+  survivors shrink-remesh, recover the victim's partition (cross-process
+  peer staging or pool) and finish bit-identically to a planned shrink;
+* ``repro.scenarios.cluster`` — the cluster suite orchestration
+  (``run_cluster_scenario`` / ``run_cluster_suite``: kill points x
+  {peer-newer, pool-newer} recovery sources);
 * ``repro.scenarios.runner`` — orchestrates kill -> inspect -> restart ->
-  compare, one scenario per kill point for both suites (CLI:
-  ``--suite train|serve|all``; library: ``run_scenario`` / ``run_suite``
-  / ``run_serve_scenario`` / ``run_serve_suite``).
+  compare, one scenario per kill point for all suites (CLI:
+  ``--suite train|serve|cluster|all``; library: ``run_scenario`` /
+  ``run_suite`` / ``run_serve_scenario`` / ``run_serve_suite`` /
+  ``run_cluster_suite``).
 
 Import the run functions from ``repro.scenarios.runner`` (submodules are
 not re-exported here so ``python -m`` entry points stay clean).

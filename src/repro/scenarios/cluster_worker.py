@@ -1,0 +1,380 @@
+"""The killable CLUSTER worker: rank i of N data-parallel processes over
+ONE shared DSM pool (the tentpole of the multi-writer protocol,
+``repro.dsm.cluster``).
+
+Each rank OWNS a disjoint partition of a deterministic toy model state
+(``repro.train.elastic.partition_plan``) and the ranks advance in
+lockstep: per step every rank computes the gradient contribution of its
+data shard (``data.pipeline.shard_plan`` slice of the global batch), the
+contributions are summed bit-exactly on the file all-reduce board, and
+each rank applies the identical scalar update to its owned tensors — so
+the CLUSTER state at step k is a pure function of (seed, membership
+history), and a crash + shrink + replay must be bit-identical to a
+planned shrink at the same step.
+
+Every step each rank LStores its partition and RStore-stages it into its
+ring sibling's spill-file buffer; every ``--commit-every`` steps it
+RFlushes (sharded pipelines) and completes through the multi-writer
+cluster protocol: rank record, then ONE elected cluster manifest
+referencing every rank's objects at that step.
+
+``--kill-point`` arms the commit-window fault hook exactly like the
+single-worker scenario process: the rank ``os._exit``s at
+pre_flush / mid_flush / post_completeOp of the first commit at or after
+``--kill-step``.  Survivors detect the death while blocked on the
+victim's all-reduce contribution (the orchestrator posts the membership
+change), then run the elastic shrink protocol:
+
+1. the victim's ring sibling recovers the victim's partition —
+   **peer-staging** (its own spill buffer) if the staged step tag beats
+   the newest cluster manifest, else **pool** — and publishes the
+   recovered step ``q`` + source;
+2. if ``q`` is older than the survivors' live step they ROLL BACK to the
+   cluster manifest at ``q`` (never mix steps);
+3. all survivors (sibling also covering the victim's objects) GPF-flush
+   state at ``q`` and commit a gen+1 recovery manifest;
+4. everyone re-reads the full state from that manifest, repartitions over
+   the survivor set (``partition_plan``), re-places adopted tensors via
+   ``train.elastic.remesh``, re-plans data shards, and resumes at
+   ``q + 1``.
+
+A planned shrink (``--shrink-at``, posted as a planned control entry by
+the launcher) runs steps 3-4 with the departing rank still alive — the
+reference run every kill scenario must match bit-for-bit.
+
+    PYTHONPATH=src python -m repro.scenarios.cluster_worker --pool /tmp/p \
+        --rank 1 --world 3 --kill-point mid_flush --kill-step 3
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import zlib
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+import jax
+
+from repro.data.pipeline import SyntheticLMSource, shard_plan
+from repro.dsm.cluster import (ClusterProtocol, ControlPlane,
+                               FileStagingArea, MembershipChange,
+                               ScalarReduceBoard, rank_ns, ring_sibling)
+from repro.dsm.flit_runtime import DurableCommitter, KILL_POINTS
+from repro.dsm.pool import DSMPool, manifest_entry
+from repro.dsm.recovery import RecoveryManager
+from repro.dsm.tiers import TierManager
+from repro.models.params import ParamDesc
+from repro.scenarios.worker import KILL_EXIT
+from repro.train.elastic import partition_plan, remesh
+
+
+def tensor_names(n: int) -> List[str]:
+    return [f"t{i:02d}" for i in range(n)]
+
+
+def init_tensor(name: str, dim: int, seed: int) -> Dict[str, np.ndarray]:
+    """Deterministic per-tensor init — any rank (or a replay) derives the
+    identical values, which is what makes ownership a pure bookkeeping
+    choice."""
+    rng = np.random.default_rng((seed, int(name[1:]), 0xC1))
+    return {
+        "p": rng.standard_normal((dim, dim)).astype(np.float32),
+        "mu": np.zeros((dim, dim), np.float32),
+        "nu": np.zeros((dim, dim), np.float32),
+    }
+
+
+def partition_templates(rank: int, partition: Dict[str, int],
+                        dim: int) -> Dict[str, Any]:
+    """Pytree prototypes of one rank's two objects (for recovery reads)."""
+    owned = sorted(t for t, r in partition.items() if r == rank)
+    z = lambda: np.zeros((dim, dim), np.float32)
+    return {
+        rank_ns(rank, "params"): {t: z() for t in owned},
+        rank_ns(rank, "opt"): {t: {"mu": z(), "nu": z()} for t in owned},
+    }
+
+
+class ClusterWorker:
+    def __init__(self, args, fault_hook=None):
+        self.args = args
+        self.rank = args.rank
+        self.live = list(range(args.world))
+        self.gen = 0
+        self.pool = DSMPool(args.pool)
+        self.control = ControlPlane(os.path.join(args.pool, "control"))
+        self.board = ScalarReduceBoard(os.path.join(args.pool, "reduce"))
+        self.staging = FileStagingArea(os.path.join(args.pool, "staging"))
+        self.names = tensor_names(args.tensors)
+        self.partition = partition_plan(self.names, self.live)
+        self.tensors = {t: init_tensor(t, args.dim, args.seed)
+                        for t in self.names if self.partition[t] == self.rank}
+        self.source = SyntheticLMSource(1024)
+        self.tiers = TierManager(self.pool, self.rank)
+        self.proto = ClusterProtocol(self.pool, self.rank, self.live,
+                                     confirm=fault_hook is not None,
+                                     retention=args.retention or None,
+                                     timeout=args.timeout)
+        self.committer = DurableCommitter(
+            self.tiers, mode="sharded", n_shards=args.shards,
+            fault_hook=fault_hook,
+            complete_fn=self.proto.cluster_complete,
+            replicate_to=self._proxy())
+        self.step_done = -1          # last step whose update is applied
+        self.resumed_from: Optional[int] = None
+        self.source_used: Optional[str] = None
+
+    def _proxy(self):
+        if not self.args.replicate:
+            return None
+        return self.staging.proxy(ring_sibling(self.rank, self.live))
+
+    # -- state objects -------------------------------------------------------
+    @property
+    def owned(self) -> List[str]:
+        return sorted(t for t, r in self.partition.items()
+                      if r == self.rank)
+
+    def state_objects(self) -> Dict[str, Any]:
+        return {
+            rank_ns(self.rank, "params"):
+                {t: self.tensors[t]["p"] for t in self.owned},
+            rank_ns(self.rank, "opt"):
+                {t: {"mu": self.tensors[t]["mu"],
+                     "nu": self.tensors[t]["nu"]} for t in self.owned},
+        }
+
+    def _meta(self, extra: Optional[dict] = None) -> dict:
+        return self.proto.meta_for(partition=self.partition,
+                                   **(extra or {}))
+
+    # -- the deterministic data-parallel step --------------------------------
+    def _partial(self, step: int) -> float:
+        plan = shard_plan(self.args.global_batch, len(self.live))
+        s, c = plan[sorted(self.live).index(self.rank)]
+        tok = self.source.sequence_batch(
+            self.args.seed, step * self.args.global_batch + s, c,
+            self.args.seq + 1)
+        # sum (not mean) of per-sequence means: the cross-rank combine is
+        # then independent of how the batch is sharded
+        return float(tok[:, :-1].astype(np.float64).mean(axis=1).sum())
+
+    def _apply(self, x: np.float32):
+        for t in self.owned:
+            d = self.tensors[t]
+            g = np.float32(0.01) * d["p"] + x
+            d["p"] = d["p"] - np.float32(0.1) * g
+            d["mu"] = np.float32(0.9) * d["mu"] + np.float32(0.1) * g
+            d["nu"] = (np.float32(0.95) * d["nu"]
+                       + np.float32(0.05) * g * g)
+
+    # -- shrink protocol -----------------------------------------------------
+    def _flush_and_record(self, q: int,
+                          extra: Optional[Dict[str, Any]] = None,
+                          meta: Optional[dict] = None) -> dict:
+        """GPF leg of a shrink: durably flush my objects (+ any adopted
+        victim objects) at step ``q``, record, elect, and WAIT for the
+        cluster manifest — the barrier every shrink participant crosses."""
+        entries = {}
+        objs = dict(self.state_objects())
+        objs.update(extra or {})
+        for name, tree in objs.items():
+            self.tiers.lstore(name, tree)
+            entries[name] = manifest_entry(self.tiers.rflush(name))
+        self.proto.write_record(q, entries)
+        self.proto.try_commit(q, meta or self._meta())
+        return self.proto.wait_manifest(q, control=self.control)
+
+    def _repartition(self, m: dict, old_partition: Dict[str, int],
+                     old_live: List[int]):
+        """Re-read the FULL state from the shrink manifest, take my slice
+        of the new partition over the survivor set, and re-place adopted
+        tensors on the local mesh (``train.elastic.remesh`` — on a real
+        cluster this is the resharding transfer)."""
+        full: Dict[str, Dict[str, np.ndarray]] = {}
+        for r in sorted(old_live):
+            tpl = partition_templates(r, old_partition, self.args.dim)
+            pname, oname = rank_ns(r, "params"), rank_ns(r, "opt")
+            params = self.pool.read_entry(pname, m["objects"][pname],
+                                          tpl[pname])
+            opt = self.pool.read_entry(oname, m["objects"][oname],
+                                       tpl[oname])
+            for t, p in params.items():
+                full[t] = {"p": p, "mu": opt[t]["mu"], "nu": opt[t]["nu"]}
+        self.partition = partition_plan(self.names, self.live)
+        mine = {t: full[t] for t in self.names
+                if self.partition[t] == self.rank}
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        descs = {t: {k: ParamDesc(v.shape, (None,) * v.ndim)
+                     for k, v in d.items()} for t, d in mine.items()}
+        placed, _ = remesh(mine, descs, mesh)
+        self.tensors = {
+            t: {k: np.asarray(v) for k, v in d.items()}
+            for t, d in placed.items()}
+        self.committer.replicate_to = self._proxy()
+
+    def _crash_shrink(self, victim: int):
+        """A peer died mid-run: recover its partition (peer-staging beats
+        the pool if newer), roll back if the pool copy is older than our
+        live step, commit the gen+1 recovery manifest, repartition."""
+        old_live, old_partition = list(self.live), dict(self.partition)
+        gen_new = self.gen + 1
+        live_new = [r for r in old_live if r != victim]
+        adopter = ring_sibling(victim, old_live)
+        victim_tpl = partition_templates(victim, old_partition,
+                                         self.args.dim)
+        if self.rank == adopter:
+            view = self.staging.view(self.rank, victim_tpl)
+            vobjs, q, source = RecoveryManager(self.pool).recover(
+                victim_tpl, peers=(view,), exact=False)
+            self.control.post_shrink_result(
+                gen_new, {"q": q, "source": source, "victim": victim,
+                          "live": live_new})
+        else:
+            doc = self.control.wait_shrink_result(
+                gen_new, timeout=self.args.timeout)
+            q, source, vobjs = doc["q"], doc["source"], None
+        self.gen = gen_new
+        self.live = live_new
+        self.proto.set_membership(gen_new, live_new)
+        if q < self.step_done:
+            # the victim's newest copy predates our live state: the whole
+            # cluster rolls back to the manifest at q — never mix steps
+            mq = self.proto.find_manifest(q)
+            my_tpl = partition_templates(self.rank, old_partition,
+                                         self.args.dim)
+            pname, oname = rank_ns(self.rank, "params"), \
+                rank_ns(self.rank, "opt")
+            params = self.pool.read_entry(pname, mq["objects"][pname],
+                                          my_tpl[pname])
+            opt = self.pool.read_entry(oname, mq["objects"][oname],
+                                       my_tpl[oname])
+            self.tensors = {t: {"p": params[t], "mu": opt[t]["mu"],
+                                "nu": opt[t]["nu"]} for t in params}
+            self.step_done = q
+        meta = self.proto.meta_for(
+            partition=old_partition,
+            next_partition=partition_plan(self.names, live_new),
+            recovered={"victim": victim, "source": source})
+        m = self._flush_and_record(q, extra=vobjs, meta=meta)
+        self._repartition(m, old_partition, old_live)
+        self.step_done = q
+        self.resumed_from = q
+        self.source_used = source
+
+    def _planned_shrink(self, victim: int, at_step: int) -> bool:
+        """Elastic scale-down at a step boundary (the paper's sanctioned
+        GPF use): every rank — the departing one included — flushes state
+        at ``at_step - 1`` into a gen+1 manifest; survivors repartition
+        and continue.  Returns True if THIS rank is the one departing."""
+        old_live, old_partition = list(self.live), dict(self.partition)
+        q = at_step - 1
+        gen_new = self.gen + 1
+        self.gen = gen_new
+        self.proto.set_membership(gen_new, old_live)   # all ranks record
+        meta = self.proto.meta_for(
+            partition=old_partition,
+            next_partition=partition_plan(
+                self.names, [r for r in old_live if r != victim]),
+            planned_shrink={"victim": victim, "at_step": at_step})
+        m = self._flush_and_record(q, meta=meta)
+        if self.rank == victim:
+            return True
+        self.live = [r for r in old_live if r != victim]
+        self.proto.set_membership(gen_new, self.live)
+        self._repartition(m, old_partition, old_live)
+        return False
+
+    # -- main loop -----------------------------------------------------------
+    def run(self) -> dict:
+        # initial durable floor (step -1): even a kill inside the FIRST
+        # commit window leaves a recoverable cluster manifest.  Doubles as
+        # the start barrier — every rank waits for it.
+        self.committer.update(self.state_objects(), step=-1)
+        self.committer.commit(-1, meta=self._meta())
+        self.proto.wait_manifest(-1, control=self.control)
+
+        k = 0
+        while k < self.args.steps:
+            ctl = self.control.read()
+            if (ctl and ctl.get("planned") and ctl["at_step"] == k
+                    and ctl["victim"] in self.live):
+                if self._planned_shrink(ctl["victim"], k):
+                    return {"rank": self.rank, "planned_exit_at": k}
+            self.board.contribute(self.gen, k, self.rank, self._partial(k))
+            try:
+                total = self.board.combine(self.gen, k, self.live,
+                                           control=self.control,
+                                           timeout=self.args.timeout)
+            except MembershipChange as e:
+                self._crash_shrink(e.victim)
+                k = self.step_done + 1
+                continue
+            self._apply(np.float32(total / self.args.global_batch / 1000.0))
+            self.step_done = k
+            self.committer.update(self.state_objects(), step=k)
+            if (k + 1) % self.args.commit_every == 0:
+                self.committer.commit(k, meta=self._meta())
+            k += 1
+
+        # final GPF commit: make the last step durable whatever the cadence
+        last = self.args.steps - 1
+        if self.proto.find_manifest(last, gen=self.gen) is None:
+            self._flush_and_record(last, meta=self._meta())
+        digests = {
+            t: zlib.crc32(np.ascontiguousarray(
+                self.tensors[t]["p"]).tobytes())
+            for t in self.owned}
+        return {"rank": self.rank, "live": sorted(self.live),
+                "gen": self.gen, "resumed_from": self.resumed_from,
+                "source": self.source_used, "digests": digests,
+                "final_step": last}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pool", required=True)
+    ap.add_argument("--rank", type=int, required=True)
+    ap.add_argument("--world", type=int, required=True)
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--commit-every", type=int, default=2)
+    ap.add_argument("--dim", type=int, default=16)
+    ap.add_argument("--tensors", type=int, default=6)
+    ap.add_argument("--global-batch", type=int, default=6)
+    ap.add_argument("--seq", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--shards", type=int, default=2)
+    ap.add_argument("--replicate", type=int, default=1,
+                    help="RStore-stage into the ring sibling (1) or not "
+                         "(0 — recovery must come from the pool)")
+    ap.add_argument("--retention", type=int, default=0,
+                    help="cluster manifests kept by the elected "
+                         "committer's post-commit gc (0 = unbounded; the "
+                         "crash scenarios run unbounded so every commit "
+                         "stays inspectable)")
+    ap.add_argument("--timeout", type=float, default=120.0,
+                    help="rendezvous timeout (s)")
+    ap.add_argument("--kill-point", default="none",
+                    choices=("none",) + KILL_POINTS)
+    ap.add_argument("--kill-step", type=int, default=3)
+    args = ap.parse_args(argv)
+
+    hook = None
+    if args.kill_point != "none":
+        def hook(point, step):
+            if point == args.kill_point and step >= args.kill_step:
+                sys.stderr.write(f"KILL rank={args.rank} {point} "
+                                 f"step={step}\n")
+                sys.stderr.flush()
+                os._exit(KILL_EXIT)
+
+    result = ClusterWorker(args, fault_hook=hook).run()
+    print(json.dumps(result))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

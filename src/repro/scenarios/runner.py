@@ -23,12 +23,22 @@ finished the trace with every session's output tokens BIT-IDENTICAL to an
 uninterrupted reference run — committed sessions replay exactly, whether
 restored from their committed KV cache or re-decoded from the prompt.
 
-``run_suite`` / ``run_serve_suite`` run all three kill points; the CLI
-prints one line per scenario:
+One CLUSTER scenario (``repro.scenarios.cluster.run_cluster_scenario``)
+kills one of N>=3 REAL worker processes sharing one pool inside the
+commit window; the survivors must shrink-remesh, recover the victim's
+state partition from the expected source (a sibling's cross-process
+RStore-staged copy when newer than the pool, else the newest cluster
+manifest) and finish bit-identically to a planned shrink at the same
+step.
+
+``run_suite`` / ``run_serve_suite`` / ``run_cluster_suite`` run all the
+kill points; the CLI prints one line per scenario:
 
     PYTHONPATH=src python -m repro.scenarios.runner [--suite all]
         [--workdir DIR] [--steps 8] [--commit-every 2]
         [--mode sharded-async] [--shards 4]
+        [--kill-points pre_flush,mid_flush,post_completeOp]
+        [--cluster-sources peer,pool]
 """
 from __future__ import annotations
 
@@ -285,7 +295,7 @@ def main(argv=None) -> int:
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--suite", default="train",
-                    choices=["train", "serve", "all"])
+                    choices=["train", "serve", "cluster", "all"])
     ap.add_argument("--workdir", default=None)
     ap.add_argument("--steps", type=int, default=8)
     ap.add_argument("--commit-every", type=int, default=2)
@@ -298,6 +308,21 @@ def main(argv=None) -> int:
                     help="serve suite: decode slots")
     ap.add_argument("--restore-mode", default="cache",
                     choices=["cache", "replay"])
+    def _world(v):
+        if int(v) < 3:
+            raise argparse.ArgumentTypeError(
+                "--world must be >= 3 (the shrunk cluster still needs a "
+                "staging sibling for every rank)")
+        return int(v)
+    ap.add_argument("--world", type=_world, default=3,
+                    help="cluster suite: worker processes (N >= 3)")
+    ap.add_argument("--kill-points", default=",".join(KILL_POINTS),
+                    help="cluster suite: comma-separated subset of the "
+                         "kill points (reduced matrix for smoke jobs)")
+    ap.add_argument("--cluster-sources", default="peer,pool",
+                    help="cluster suite: recovery sources to exercise "
+                         "(peer = sibling staging newer than the pool, "
+                         "pool = replication off)")
     args = ap.parse_args(argv)
     workdir = args.workdir or tempfile.mkdtemp(prefix="scenarios_")
     failed = 0
@@ -324,6 +349,27 @@ def main(argv=None) -> int:
                   f"resumed_sessions={r.resumed_sessions},"
                   f"recovered_done={r.recovered_done},"
                   f"outputs_bit_identical={r.outputs_match}"
+                  + (f",detail={r.detail}" if r.detail else ""))
+    if args.suite in ("cluster", "all"):
+        from repro.scenarios.cluster import run_cluster_suite
+        points = [p for p in args.kill_points.split(",") if p]
+        srcs = [s for s in args.cluster_sources.split(",") if s]
+        for r in run_cluster_suite(workdir, points=points, sources=srcs,
+                                   world=args.world,
+                                   # survivors must reach at least one
+                                   # all-reduce AFTER the kill at commit
+                                   # step 2C-1 to detect the death
+                                   steps=max(args.steps,
+                                             2 * args.commit_every + 1),
+                                   commit_every=args.commit_every):
+            status = "OK" if r.ok else "FAIL"
+            failed += not r.ok
+            print(f"cluster_scenario,{r.kill_point},"
+                  f"{'peer' if r.replicate else 'pool'},{status},"
+                  f"completed={r.completed_steps_at_kill},"
+                  f"resumed={r.resumed_from},source={r.recovery_source},"
+                  f"expected=({r.expected_resume},{r.expected_source}),"
+                  f"digest_match={r.digests == r.reference_digests}"
                   + (f",detail={r.detail}" if r.detail else ""))
     return 1 if failed else 0
 

@@ -16,7 +16,7 @@ meshes; tests/test_elastic.py exercises a real 8→4 device shrink on CPU.
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -53,3 +53,19 @@ def shrink_plan(old_ranks: int, new_ranks: int) -> dict:
     the pipeline is deterministic — any rank can compute any shard)."""
     assert new_ranks > 0
     return {r: r % new_ranks for r in range(old_ranks)}
+
+
+def partition_plan(names: Sequence[str], ranks: Sequence[int]
+                   ) -> Dict[str, int]:
+    """Stable ownership map of named state entries over a rank set — the
+    FSDP-style state partition of the cluster protocol
+    (``repro.dsm.cluster``): each data-parallel rank OWNS a disjoint slice
+    of the model/optimizer state and commits it under its ``w<i>/``
+    namespace.  Round-robin over the sorted names and the sorted live
+    ranks, so every process (and a restarted one) derives the identical
+    map from the same membership — no coordinator needed.  On a shrink the
+    plan recomputed for the surviving ranks reassigns the victim's entries
+    deterministically."""
+    ranks = sorted(ranks)
+    assert ranks, "partition over an empty rank set"
+    return {n: ranks[i % len(ranks)] for i, n in enumerate(sorted(names))}

@@ -92,7 +92,11 @@ def run_durable_loop(
     n_shards: Optional[int] = None,      # sharded modes; None = per-device
     retention: Optional[int] = None,     # keep newest k manifests (GC)
     worker_id: int = 0,
-    peer_tiers: Optional[TierManager] = None,
+    peer_tiers=None,            # one peer, or a sequence of peers: anything
+    #                             with a .staging mapping (TierManager, or a
+    #                             cross-process staging view).  Replication
+    #                             targets the FIRST peer; recovery consults
+    #                             them all.
     replicate: bool = False,
     crash_at: Optional[Dict[int, str]] = None,   # step -> "before_commit" |
     #                                              "after_commit" | "mid_write"
@@ -113,11 +117,13 @@ def run_durable_loop(
     pool instead of re-committing a fresh step -1 (which would shadow newer
     manifests).
     """
+    peers = (tuple(peer_tiers) if isinstance(peer_tiers, (tuple, list))
+             else (peer_tiers,) if peer_tiers is not None else ())
     tiers = TierManager(pool, worker_id)
     committer = DurableCommitter(
         tiers, mode=commit_mode, n_shards=n_shards, retention=retention,
         fault_hook=fault_hook,
-        replicate_to=peer_tiers if replicate else None)
+        replicate_to=peers[0] if (replicate and peers) else None)
     recovery = RecoveryManager(pool)
     templates = _state_objects(init_state, pipeline.state)
 
@@ -132,8 +138,7 @@ def run_durable_loop(
     i = 0
     if resume:
         try:
-            objs, rec_step, source = recovery.recover(
-                templates, (peer_tiers,) if peer_tiers is not None else ())
+            objs, rec_step, source = recovery.recover(templates, peers)
             state, pipe_state = _objects_to_state(objs, state)
             pipeline.state = pipe_state
             recoveries.append(source)
@@ -186,7 +191,6 @@ def run_durable_loop(
             committer.abort_pending()     # join+discard in-flight flushes
             tiers.crash()                 # f_i: volatile tiers vanish
             # --- recovery (new worker incarnation) -------------------------
-            peers = (peer_tiers,) if peer_tiers is not None else ()
             objs, rec_step, source = recovery.recover(templates, peers)
             state, pipe_state = _objects_to_state(objs, state)
             pipeline.state = pipe_state

@@ -1,0 +1,223 @@
+"""Cluster protocol units (repro.dsm.cluster) + one end-to-end kill
+scenario: cross-process staging feeds RecoveryManager's peer path,
+rank records elect exactly one cluster completeOp per step, the
+all-reduce board is bit-exact and doubles as the failure detector, and
+killing 1 of 3 real worker processes mid-commit ends bit-identical to a
+planned shrink."""
+import os
+import threading
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.dsm.cluster import (ClusterProtocol, ControlPlane,
+                               FileStagingArea, MembershipChange,
+                               ScalarReduceBoard, rank_ns, ring_sibling)
+from repro.dsm.pool import DSMPool
+from repro.dsm.recovery import RecoveryManager
+from repro.dsm.tiers import TierManager
+from repro.train.elastic import partition_plan
+
+
+def test_partition_plan_covers_and_reassigns():
+    names = [f"t{i}" for i in range(7)]
+    plan = partition_plan(names, [0, 1, 2])
+    assert set(plan) == set(names)
+    assert set(plan.values()) <= {0, 1, 2}
+    # every process derives the identical plan from the same membership
+    assert plan == partition_plan(list(reversed(names)), [2, 0, 1])
+    shrunk = partition_plan(names, [0, 2])
+    assert set(shrunk.values()) <= {0, 2}     # victim's entries reassigned
+
+
+def test_ring_sibling():
+    assert ring_sibling(0, [0, 1, 2]) == 1
+    assert ring_sibling(2, [0, 1, 2]) == 0
+    assert ring_sibling(0, [0, 2]) == 2
+
+
+def test_staging_roundtrip_and_wipe(tmp_path):
+    area = FileStagingArea(str(tmp_path))
+    tree = {"a": np.arange(6, dtype=np.float32).reshape(2, 3),
+            "b": {"c": jnp.ones((3,), jnp.bfloat16)}}
+    area.proxy(2).staging["w0/params"] = (7, tree)
+    view = area.view(2, {"w0/params": tree})
+    tag, back = view.staging["w0/params"]
+    assert tag == 7
+    assert np.array_equal(np.asarray(back["a"]), np.asarray(tree["a"]))
+    assert str(np.asarray(back["b"]["c"]).dtype) == "bfloat16"
+    assert np.asarray(back["b"]["c"]).tobytes() == \
+        np.asarray(tree["b"]["c"]).tobytes()
+    area.wipe(2)                  # the buffer owner's crash loses it
+    assert view.staging and not area.view(2, {"w0/params": tree}).staging
+
+
+def test_staging_meta_payload_mismatch_discarded(tmp_path):
+    """A stager dying between the payload and meta renames leaves the OLD
+    meta next to a NEW payload; the CRC recorded in the meta catches the
+    mismatch and the copy is discarded (recovery falls back to the pool)
+    instead of being adopted under the stale step tag."""
+    area = FileStagingArea(str(tmp_path))
+    old = {"a": np.zeros((3,), np.float32)}
+    new = {"a": np.ones((3,), np.float32)}
+    area.proxy(1).staging["w0/params"] = (1, old)
+    meta_path = os.path.join(area.area(1), "w0__params.json")
+    with open(meta_path) as f:
+        stale_meta = f.read()
+    area.proxy(1).staging["w0/params"] = (2, new)
+    with open(meta_path, "w") as f:
+        f.write(stale_meta)             # old meta now describes new payload
+    assert not area.view(1, {"w0/params": old}).staging
+
+
+def test_rstore_through_proxy_feeds_cross_process_recovery(tmp_path):
+    """The tentpole wiring: TierManager.rstore targets a StagingProxy, a
+    DIFFERENT 'process' (fresh objects, same dirs) reads the staged copy
+    back through FileStagingArea.view, and RecoveryManager adopts it over
+    an older pool manifest — the peer-staging path across processes."""
+    pool = DSMPool(str(tmp_path / "pool"))
+    area = FileStagingArea(str(tmp_path / "staging"))
+    name = rank_ns(0, "params")
+    tiers = TierManager(pool, worker_id=0)
+    old = {"t": np.zeros((4,), np.float32)}
+    new = {"t": np.full((4,), 2.5, np.float32)}
+    tiers.lstore(name, old)
+    pool.commit_manifest(3, {name: tiers.rflush(name)})   # pool at step 3
+    tiers.lstore(name, new)
+    tiers.rstore(name, area.proxy(1), tag=5)              # staged at step 5
+    # --- sibling side: fresh handles, as a separate process would have ---
+    view = FileStagingArea(str(tmp_path / "staging")).view(
+        1, {name: {"t": np.zeros((4,), np.float32)}})
+    objs, step, source = RecoveryManager(
+        DSMPool(str(tmp_path / "pool"))).recover(
+        {name: {"t": np.zeros((4,), np.float32)}}, peers=(view,),
+        exact=False)
+    assert (step, source) == (5, "peer-staging")
+    assert np.array_equal(np.asarray(objs[name]["t"]), new["t"])
+    # stale staging (tag <= pool step) loses to the pool
+    tiers.rstore(name, area.proxy(1), tag=3)
+    view = area.view(1, {name: old})
+    objs, step, source = RecoveryManager(pool).recover(
+        {name: old}, peers=(view,), exact=False)
+    assert (step, source) == (3, "pool")
+    assert np.array_equal(np.asarray(objs[name]["t"]), old["t"])
+
+
+def test_subset_recovery_from_cluster_manifest(tmp_path):
+    """exact=False: recover ONE rank's objects out of a manifest that
+    references every rank's."""
+    pool = DSMPool(str(tmp_path))
+    tiers = TierManager(pool, worker_id=0)
+    objs = {}
+    for r in range(3):
+        name = rank_ns(r, "params")
+        tiers.lstore(name, {"t": np.full((2,), float(r), np.float32)})
+        objs[name] = tiers.rflush(name)
+    pool.commit_manifest(4, objs)
+    tpl = {rank_ns(1, "params"): {"t": np.zeros((2,), np.float32)}}
+    got = RecoveryManager(pool).recover_from_pool(tpl, exact=False)
+    assert got is not None and got[1] == 4
+    assert np.array_equal(np.asarray(got[0][rank_ns(1, "params")]["t"]),
+                          np.full((2,), 1.0))
+    # exact mode still refuses the superset manifest
+    assert RecoveryManager(pool).recover_from_pool(tpl) is None
+
+
+def test_reduce_board_bit_exact_and_detects_death(tmp_path):
+    board = ScalarReduceBoard(str(tmp_path / "reduce"))
+    control = ControlPlane(str(tmp_path / "control"))
+    vals = {0: 0.1, 1: 2.30000000007, 2: -1.25}
+    for r, v in vals.items():
+        board.contribute(0, 5, r, v)
+    total = board.combine(0, 5, [0, 1, 2], control=control)
+    assert total == ((vals[0] + vals[1]) + vals[2])    # fixed order
+    # generations never leak into each other
+    with pytest.raises(TimeoutError):
+        board.combine(1, 5, [0, 1, 2], timeout=0.2)
+    # a posted death surfaces as MembershipChange while blocked
+    board.contribute(0, 6, 0, 1.0)
+    control.post(1)
+    with pytest.raises(MembershipChange):
+        board.combine(0, 6, [0, 1], control=control, timeout=5.0)
+
+
+def test_cluster_commit_elects_exactly_one_manifest(tmp_path):
+    """Three rank handles record step 2 concurrently: all records land in
+    ONE cluster manifest, and only one completeOp happens even when every
+    rank sees the full record set."""
+    pool_dir = str(tmp_path)
+    protos = [ClusterProtocol(DSMPool(pool_dir), r, [0, 1, 2])
+              for r in range(3)]
+    entries = {}
+    for r, proto in enumerate(protos):
+        tiers = TierManager(proto.pool, worker_id=r)
+        name = rank_ns(r, "state")
+        tiers.lstore(name, {"t": np.full((2,), float(r), np.float32)})
+        entries[r] = {name: proto.pool.write_object(
+            name, 1, {"t": np.full((2,), float(r), np.float32)})}
+    barrier = threading.Barrier(3)
+    seqs = [None] * 3
+
+    def commit(r):
+        protos[r].write_record(2, {n: dict(name=o.name, version=o.version,
+                                           crc=o.crc, nbytes=o.nbytes)
+                                   for n, o in entries[r].items()})
+        barrier.wait()            # all records down -> all try to commit
+        seqs[r] = protos[r].try_commit(2)
+
+    threads = [threading.Thread(target=commit, args=(r,)) for r in range(3)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    winners = [s for s in seqs if s != -1]
+    assert len(winners) == 1      # the O_EXCL marker elects exactly one
+    ms = DSMPool(pool_dir).manifests_desc()
+    assert len(ms) == 1 and ms[0]["step"] == 2
+    assert set(ms[0]["objects"]) == {rank_ns(r, "state") for r in range(3)}
+
+
+def test_commit_marker_failover(tmp_path):
+    """A winner that dies between winning the .commit marker and renaming
+    the manifest must not wedge the step forever: a waiter whose record
+    set is complete takes over after the grace period (the duplicate-
+    commit worst case is benign — same records, atomic seq)."""
+    pool = DSMPool(str(tmp_path))
+    protos = [ClusterProtocol(pool, r, [0, 1], timeout=8.0)
+              for r in range(2)]
+    for r, proto in enumerate(protos):
+        obj = pool.write_object(rank_ns(r, "state"), 1,
+                                {"t": np.zeros(2, np.float32)})
+        proto.write_record(0, {obj.name: dict(
+            name=obj.name, version=obj.version, crc=obj.crc,
+            nbytes=obj.nbytes)})
+    assert protos[0]._win_commit_marker(0)    # winner "dies" right here
+    assert protos[1].try_commit(0) == -1      # wedged under the marker...
+    m = protos[1].wait_manifest(0)            # ...until takeover kicks in
+    assert m["step"] == 0
+    assert set(m["objects"]) == {rank_ns(0, "state"), rank_ns(1, "state")}
+
+
+def test_cluster_commit_waits_for_all_records(tmp_path):
+    proto = ClusterProtocol(DSMPool(str(tmp_path)), 0, [0, 1])
+    proto.write_record(0, {"w0/state": {"name": "w0/state", "version": 1,
+                                        "crc": 0, "nbytes": 8}})
+    assert proto.try_commit(0) == -1          # rank 1 not recorded yet
+    assert proto.find_manifest(0) is None
+
+
+@pytest.mark.slow
+def test_kill_one_of_three_matches_planned_shrink(tmp_path):
+    """End-to-end (real processes): kill rank 1 of 3 at pre_flush; the
+    survivors adopt the victim's partition from cross-process peer
+    staging and finish bit-identical to a planned shrink.  The full
+    matrix runs in the scenario suite (runner --suite cluster)."""
+    from repro.scenarios.cluster import run_cluster_scenario
+    res = run_cluster_scenario("pre_flush", str(tmp_path), replicate=True,
+                               steps=8, commit_every=2)
+    assert res.killed, res.detail
+    assert res.recovery_source == "peer-staging", res
+    assert res.resumed_from == res.expected_resume, res
+    assert res.digests and res.digests == res.reference_digests, res
+    assert res.ok

@@ -1,0 +1,86 @@
+"""Regression tests for failed background flushes: the exception must
+surface at the join (flush_wait), and the FliT counter must return to 0
+either way — the original bug stored only successes, so a failed threaded
+write raised a bare KeyError from flush_wait and leaked the raised
+counter forever (every later joiner would think the pool copy is
+permanently stale)."""
+import jax.numpy as jnp
+import pytest
+
+from repro.dsm.flit_runtime import DurableCommitter
+from repro.dsm.pool import DSMPool
+from repro.dsm.tiers import TierManager
+
+
+class BoomError(OSError):
+    pass
+
+
+@pytest.fixture
+def tiers(tmp_path):
+    t = TierManager(DSMPool(str(tmp_path)), worker_id=0)
+    yield t
+    t.close()
+
+
+def _fail_writes(tiers, monkeypatch):
+    def boom(name, version, tree):
+        raise BoomError(f"disk full writing {name}@{version}")
+    monkeypatch.setattr(tiers.pool, "write_object", boom)
+
+
+def test_failed_threaded_flush_surfaces_and_counter_drops(tiers,
+                                                          monkeypatch):
+    tiers.lstore("x", {"a": jnp.arange(8.0)})
+    _fail_writes(tiers, monkeypatch)
+    tiers.flush_async("x")
+    with pytest.raises(BoomError):
+        tiers.flush_wait("x")
+    assert tiers.flit_counter["x"] == 0
+    # the error was consumed: a later successful flush works normally
+    monkeypatch.undo()
+    tiers.lstore("x", {"a": jnp.arange(8.0)})
+    tiers.flush_async("x")
+    obj = tiers.flush_wait("x")
+    assert obj.name == "x" and tiers.flit_counter["x"] == 0
+
+
+def test_failed_threaded_flush_abort_drops_counter(tiers, monkeypatch):
+    tiers.lstore("x", {"a": jnp.arange(8.0)})
+    _fail_writes(tiers, monkeypatch)
+    tiers.flush_async("x")
+    tiers.abort_flushes()           # crash path: join-and-discard
+    assert tiers.flit_counter["x"] == 0
+    assert not tiers._flush_errors and not tiers._flush_results
+
+
+def test_failed_sharded_flush_surfaces_and_counter_drops(tiers,
+                                                         monkeypatch):
+    tiers.lstore("x", {"a": jnp.arange(8.0), "b": jnp.arange(4.0)})
+    _fail_writes(tiers, monkeypatch)
+    tiers.flush_async_sharded("x", n_shards=2)
+    with pytest.raises(BoomError):
+        tiers.flush_wait("x")
+    assert tiers.flit_counter["x"] == 0
+
+
+def test_async_commit_surfaces_failed_flush_without_manifest(tmp_path,
+                                                             monkeypatch):
+    """A commit whose background write failed is simply NOT durable: the
+    join raises, no manifest is written, and the committer stays usable."""
+    pool = DSMPool(str(tmp_path))
+    tiers = TierManager(pool, worker_id=0)
+    committer = DurableCommitter(tiers, mode="async")
+    committer.update({"x": {"a": jnp.arange(8.0)}})
+    committer.commit(0)                       # launches background flush
+    _fail_writes(tiers, monkeypatch)
+    # the step-0 flush may already hold the unpatched callable mid-write;
+    # discard it and launch a fresh flush that is guaranteed to fail
+    committer.abort_pending()
+    committer.update({"x": {"a": jnp.arange(8.0)}})
+    committer.commit(1)
+    with pytest.raises(BoomError):
+        committer.commit(2)                   # joins step 1's failed flush
+    assert tiers.flit_counter["x"] == 0
+    assert pool.latest_manifest() is None     # nothing ever completed
+    tiers.close()
