@@ -22,6 +22,11 @@ import time
 
 import jax
 
+try:
+    from benchmarks.harness import Bench
+except ImportError:                      # standalone: python benchmarks/...
+    from harness import Bench
+
 from repro.configs import get_smoke_config
 from repro.data.pipeline import DataPipeline, SyntheticLMSource
 from repro.dsm.pool import DSMPool
@@ -61,6 +66,9 @@ def blocking_commit_s(r) -> float:
 
 
 def main():
+    bench = Bench("checkpoint")
+    bench.set_config(n_steps=N_STEPS, commit_every=COMMIT_EVERY,
+                     shard_sweep=list(SHARD_SWEEP))
     tmp = tempfile.mkdtemp(prefix="bench_ckpt_")
     try:
         # warmup jit
@@ -72,16 +80,21 @@ def main():
         latest = pool_s.latest_manifest()
         bytes_per_commit = sum(o["nbytes"]
                                for o in latest["objects"].values())
-        print(f"ckpt_bytes_per_commit,{bytes_per_commit},"
-              f"{bytes_per_commit/1e6:.1f} MB")
-        print(f"ckpt_commit_blocking_s,{commit_sync:.3f},mode=sync shards=1")
-        print(f"ckpt_wall_s,{t_sync:.3f},mode=sync shards=1")
+        bench.record("ckpt_bytes_per_commit", bytes_per_commit,
+                     f"{bytes_per_commit/1e6:.1f} MB")
+        bench.record("ckpt_commit_blocking_s", commit_sync,
+                     "mode=sync shards=1",
+                     key="ckpt_commit_blocking_s.sync.1", fmt=".3f")
+        bench.record("ckpt_wall_s", t_sync, "mode=sync shards=1",
+                     key="ckpt_wall_s.sync.1", fmt=".3f")
 
         r_async, t_async, _ = run("async", tmp)
         commit_async = blocking_commit_s(r_async)
-        print(f"ckpt_commit_blocking_s,{commit_async:.3f},"
-              f"mode=async shards=1")
-        print(f"ckpt_wall_s,{t_async:.3f},mode=async shards=1")
+        bench.record("ckpt_commit_blocking_s", commit_async,
+                     "mode=async shards=1",
+                     key="ckpt_commit_blocking_s.async.1", fmt=".3f")
+        bench.record("ckpt_wall_s", t_async, "mode=async shards=1",
+                     key="ckpt_wall_s.async.1", fmt=".3f")
 
         results = {}
         for mode in ("sharded", "sharded-async"):
@@ -89,25 +102,32 @@ def main():
                 r, wall, _ = run(mode, tmp, n_shards=n)
                 cb = blocking_commit_s(r)
                 results[(mode, n)] = cb
-                print(f"ckpt_commit_blocking_s,{cb:.3f},"
-                      f"mode={mode} shards={n}")
-                print(f"ckpt_wall_s,{wall:.3f},mode={mode} shards={n}")
+                bench.record("ckpt_commit_blocking_s", cb,
+                             f"mode={mode} shards={n}",
+                             key=f"ckpt_commit_blocking_s.{mode}.{n}",
+                             fmt=".3f")
+                bench.record("ckpt_wall_s", wall,
+                             f"mode={mode} shards={n}",
+                             key=f"ckpt_wall_s.{mode}.{n}", fmt=".3f")
 
         for n in SHARD_SWEEP:
             spd = commit_sync / max(results[("sharded-async", n)], 1e-9)
-            print(f"ckpt_sharded_async_speedup,{spd:.2f},"
-                  f"sync/sharded-async blocking time at {n} shards")
+            bench.record("ckpt_sharded_async_speedup", spd,
+                         f"sync/sharded-async blocking time at {n} shards",
+                         key=f"ckpt_sharded_async_speedup.{n}", fmt=".2f")
         ok4 = results[("sharded-async", 4)] <= commit_sync
-        print(f"ckpt_sharded_async_beats_sync_at_4_shards,{ok4},"
-              f"{results[('sharded-async', 4)]:.3f}s vs {commit_sync:.3f}s")
+        bench.record("ckpt_sharded_async_beats_sync_at_4_shards", bool(ok4),
+                     f"{results[('sharded-async', 4)]:.3f}s vs "
+                     f"{commit_sync:.3f}s")
 
         # -- recovery latency: pool vs peer staging ----------------------
         r2, _, _ = run("sync", tmp + "/rec2", replicate=True,
                        crash={5: "before_commit"})
-        print(f"ckpt_recoveries,{len(r2.recoveries)},"
-              f"source={','.join(r2.recoveries)}")
+        bench.record("ckpt_recoveries", len(r2.recoveries),
+                     f"source={','.join(r2.recoveries)}")
     finally:
         shutil.rmtree(tmp, ignore_errors=True)
+    bench.write()
 
 
 if __name__ == "__main__":

@@ -22,12 +22,17 @@ import time
 
 import numpy as np
 
+try:
+    from benchmarks.harness import Bench
+except ImportError:                      # standalone: python benchmarks/...
+    from harness import Bench
+
 from repro.dsm.cluster import FileStagingArea
 from repro.dsm.pool import DSMPool
 from repro.scenarios.cluster import spawn_worker
 
 
-def bench_contended_commits(tmp: str, *, writers=4, per_writer=40):
+def bench_contended_commits(bench, tmp: str, *, writers=4, per_writer=40):
     obj_pool = DSMPool(os.path.join(tmp, "contended"))
     objs = {w: obj_pool.write_object(f"w{w}/x", 1,
                                      {"a": np.zeros(64, np.float32)})
@@ -61,14 +66,16 @@ def bench_contended_commits(tmp: str, *, writers=4, per_writer=40):
 
     solo = run_writers(1)
     contended = run_writers(writers)
-    print(f"cluster_commit_rate_1_writer,{solo:.0f},commits/s")
-    print(f"cluster_commit_rate_{writers}_writers,{contended:.0f},"
-          f"commits/s aggregate; zero lost/overwritten commits asserted")
-    print(f"cluster_commit_contention_ratio,{contended / solo:.2f},"
-          f"aggregate vs solo (O_EXCL rescan overhead)")
+    bench.record("cluster_commit_rate_1_writer", solo, "commits/s",
+                 fmt=".0f")
+    bench.record(f"cluster_commit_rate_{writers}_writers", contended,
+                 "commits/s aggregate; zero lost/overwritten commits "
+                 "asserted", key="cluster_commit_rate_contended", fmt=".0f")
+    bench.record("cluster_commit_contention_ratio", contended / solo,
+                 "aggregate vs solo (O_EXCL rescan overhead)", fmt=".2f")
 
 
-def bench_staging_throughput(tmp: str, *, mb=8):
+def bench_staging_throughput(bench, tmp: str, *, mb=8):
     area = FileStagingArea(os.path.join(tmp, "staging"))
     tree = {"p": np.random.default_rng(0).standard_normal(
         (mb * 1024 * 1024 // 4,)).astype(np.float32)}
@@ -80,13 +87,14 @@ def bench_staging_throughput(tmp: str, *, mb=8):
     t_view = time.perf_counter() - t0
     assert np.array_equal(np.asarray(view.staging["w0/params"][1]["p"]),
                           tree["p"])
-    print(f"cluster_rstore_stage_mb_s,{mb / t_stage:.0f},"
-          f"{mb} MiB partition -> sibling spill buffer")
-    print(f"cluster_staging_view_mb_s,{mb / t_view:.0f},"
-          f"sibling buffer -> recovery view (read + CRC validate)")
+    bench.record("cluster_rstore_stage_mb_s", mb / t_stage,
+                 f"{mb} MiB partition -> sibling spill buffer", fmt=".0f")
+    bench.record("cluster_staging_view_mb_s", mb / t_view,
+                 "sibling buffer -> recovery view (read + CRC validate)",
+                 fmt=".0f")
 
 
-def bench_cluster_step_rate(tmp: str, *, steps=12, commit_every=3):
+def bench_cluster_step_rate(bench, tmp: str, *, steps=12, commit_every=3):
     for world in (2, 3, 4):
         pool = os.path.join(tmp, f"cluster_w{world}")
         t0 = time.perf_counter()
@@ -99,19 +107,21 @@ def bench_cluster_step_rate(tmp: str, *, steps=12, commit_every=3):
             ok = ok and p.returncode == 0
         wall = time.perf_counter() - t0
         assert ok, "cluster bench worker failed"
-        print(f"cluster_steps_per_s_world{world},{steps / wall:.2f},"
-              f"{steps} lockstep steps, commit every {commit_every} "
-              f"(incl. process startup)")
+        bench.record(f"cluster_steps_per_s_world{world}", steps / wall,
+                     f"{steps} lockstep steps, commit every {commit_every} "
+                     f"(incl. process startup)", fmt=".2f")
 
 
 def main():
+    bench = Bench("cluster")
     tmp = tempfile.mkdtemp(prefix="bench_cluster_")
     try:
-        bench_contended_commits(tmp)
-        bench_staging_throughput(tmp)
-        bench_cluster_step_rate(tmp)
+        bench_contended_commits(bench, tmp)
+        bench_staging_throughput(bench, tmp)
+        bench_cluster_step_rate(bench, tmp)
     finally:
         shutil.rmtree(tmp, ignore_errors=True)
+    bench.write()
 
 
 if __name__ == "__main__":

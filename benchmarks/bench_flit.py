@@ -12,6 +12,11 @@ from __future__ import annotations
 
 import time
 
+try:
+    from benchmarks.harness import Bench
+except ImportError:                      # standalone: python benchmarks/...
+    from harness import Bench
+
 from repro.core.flit import POLICIES
 from repro.core.harness import WORKLOADS, run_once
 from repro.core.latency import DEVICE, trace_cost
@@ -63,8 +68,11 @@ def op_cost_model():
 
 
 def main():
+    bench = Bench("flit")
+    bench.set_config(n_seeds=N_SEEDS)
     for name, val, derived in violation_rates() + op_cost_model():
-        print(f"{name},{val},{derived}")
+        bench.record(name, val, derived)
+    bench.write()
 
 
 if __name__ == "__main__":

@@ -7,6 +7,11 @@ simulator so the numbers and the executable semantics stay coupled.
 """
 from __future__ import annotations
 
+try:
+    from benchmarks.harness import Bench
+except ImportError:                      # standalone: python benchmarks/...
+    from harness import Bench
+
 from repro.core.latency import DEVICE, HOST, LATENCY_NS, primitive_latency
 
 
@@ -38,8 +43,10 @@ def rows():
 
 
 def main():
+    bench = Bench("latency")
     for name, val, derived in rows():
-        print(f"{name},{val:.2f},{derived}")
+        bench.record(name, val, derived, fmt=".2f")
+    bench.write()
 
 
 if __name__ == "__main__":

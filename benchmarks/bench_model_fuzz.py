@@ -11,6 +11,11 @@ import time
 import jax
 import numpy as np
 
+try:
+    from benchmarks.harness import Bench
+except ImportError:                      # standalone: python benchmarks/...
+    from harness import Bench
+
 from repro.core.semantics_jax import (
     JaxSystem, random_schedules, run_schedules,
 )
@@ -31,8 +36,12 @@ def main():
         C, M, obs = run_schedules(SYS, acts)
         jax.block_until_ready(obs)
     dt = (time.perf_counter() - t0) / n_rep
-    print(f"fuzz_schedules_per_s,{B/dt:.0f},batch={B} length={T}")
-    print(f"fuzz_steps_per_s,{B*T/dt:.0f},vmapped LTS steps")
+    bench = Bench("model_fuzz")
+    bench.set_config(batch=B, length=T)
+    bench.record("fuzz_schedules_per_s", B / dt, f"batch={B} length={T}",
+                 fmt=".0f")
+    bench.record("fuzz_steps_per_s", B * T / dt, "vmapped LTS steps",
+                 fmt=".0f")
     # invariant check on the batch (single-valid-value)
     C = np.asarray(C)
     bad = 0
@@ -40,7 +49,9 @@ def main():
         for x in range(SYS.n_locs):
             vals = {v for v in C[b, :, x] if v != -1}
             bad += len(vals) > 1
-    print(f"fuzz_invariant_violations,{bad},over 256 sampled end states")
+    bench.record("fuzz_invariant_violations", bad,
+                 "over 256 sampled end states")
+    bench.write()
 
 
 if __name__ == "__main__":

@@ -18,15 +18,20 @@ Measured (CPU smoke config, compile excluded via warmup):
   stateless continuous serving.  I/O-bound on CPU smoke configs; for
   RELATIVE comparison only.
 
-Also dumps machine-readable results to ``BENCH_serve.json`` (cwd).
+Emits through the shared harness: ``BENCH_serve.json`` feeds the CI
+regression gate (scripts/bench_gate.py) like every other bench.
 """
 from __future__ import annotations
 
-import json
 import os
 import shutil
 import tempfile
 import time
+
+try:
+    from benchmarks.harness import Bench
+except ImportError:                      # standalone: python benchmarks/...
+    from harness import Bench
 
 from repro.serve.engine import build_serve_engine
 from repro.serve.trace import synthetic_trace, trace_t_max
@@ -51,6 +56,7 @@ def _timed_run(engine, trace, mode: str):
 
 
 def main():
+    bench = Bench("serve")
     t_max = trace_t_max(_trace(2))
     results = {}
 
@@ -97,25 +103,33 @@ def main():
     speedup = (results["continuous"]["tokens_per_s"]
                / results["static"]["tokens_per_s"])
     overhead = dt_d / dt_c - 1.0
-    results["speedup_continuous_over_static"] = speedup
-    results["commit_overhead_frac"] = overhead
-    results["config"] = {"arch": "olmo-1b smoke", "n_requests": N_REQUESTS,
-                         "n_slots": N_SLOTS, "prompt_len": PROMPT_LEN,
-                         "new_tokens": list(NEW_TOKENS)}
+    bench.set_config(arch="olmo-1b smoke", n_requests=N_REQUESTS,
+                     n_slots=N_SLOTS, prompt_len=PROMPT_LEN,
+                     new_tokens=list(NEW_TOKENS),
+                     commit_every=COMMIT_EVERY,
+                     commit_mode="sharded-async")
 
     for mode in ("static", "continuous"):
         r = results[mode]
-        print(f"serve_tokens_per_s,{r['tokens_per_s']:.0f},mode={mode}")
-        print(f"serve_decode_ticks,{r['decode_ticks']},mode={mode}")
-    print(f"serve_speedup,{speedup:.2f},continuous/static tokens per s "
-          f"(mixed {min(NEW_TOKENS)}-{max(NEW_TOKENS)} tok budgets)")
-    print(f"serve_speedup_ge_1.3,{speedup >= 1.3},acceptance floor")
-    print(f"serve_commit_overhead_frac,{overhead:.3f},durable sessions "
-          f"(commit every {COMMIT_EVERY} ticks) vs stateless")
-
-    with open("BENCH_serve.json", "w") as f:
-        json.dump(results, f, indent=2)
-    print("serve_bench_json,BENCH_serve.json,written")
+        bench.record("serve_tokens_per_s", r["tokens_per_s"],
+                     f"mode={mode}", key=f"serve_tokens_per_s.{mode}",
+                     fmt=".0f")
+        bench.record("serve_decode_ticks", r["decode_ticks"],
+                     f"mode={mode}", key=f"serve_decode_ticks.{mode}")
+    bench.record("serve_emitted_tokens", res_c.emitted_tokens,
+                 "identical across modes (asserted)")
+    bench.record("serve_speedup", speedup,
+                 f"continuous/static tokens per s (mixed "
+                 f"{min(NEW_TOKENS)}-{max(NEW_TOKENS)} tok budgets)",
+                 fmt=".2f")
+    bench.record("serve_speedup_ge_1.3", bool(speedup >= 1.3),
+                 "acceptance floor")
+    bench.record("serve_commit_overhead_frac", overhead,
+                 f"durable sessions (commit every {COMMIT_EVERY} ticks) "
+                 f"vs stateless", fmt=".3f")
+    bench.record("serve_durable_commits", res_d.commits,
+                 "commits in the durable run")
+    bench.write()
     return speedup
 
 

@@ -6,23 +6,31 @@ system-configuration primitive sets.
 """
 from __future__ import annotations
 
+try:
+    from benchmarks.harness import Bench
+except ImportError:                      # standalone: python benchmarks/...
+    from harness import Bench
+
 from repro.core.latency import (
     CONFIG_PRIMITIVES, TABLE1, available_primitives,
 )
 
 
 def main():
+    bench = Bench("table1")
     for r in TABLE1:
-        print(f"table1_{r.node}_{r.primitive},"
-              f"{1 if r.available else 0},"
-              f"op={r.operation} | HM={'/'.join(r.to_hm)} | "
-              f"HDM={'/'.join(r.to_hdm)}")
+        bench.record(f"table1_{r.node}_{r.primitive}",
+                     1 if r.available else 0,
+                     f"op={r.operation} | HM={'/'.join(r.to_hm)} | "
+                     f"HDM={'/'.join(r.to_hdm)}")
     for node in ("host", "device"):
         av = available_primitives(node)
-        print(f"table1_available_{node},{len(av)},{'/'.join(av)}")
+        bench.record(f"table1_available_{node}", len(av), "/".join(av))
     for config, nodes in CONFIG_PRIMITIVES.items():
         for node, prims in nodes.items():
-            print(f"config_{config}_{node},{len(prims)},{'/'.join(prims)}")
+            bench.record(f"config_{config}_{node}", len(prims),
+                         "/".join(prims))
+    bench.write()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,74 @@
+"""Shared bench harness: every benchmark emits through one funnel.
+
+Each bench module builds a ``Bench("name")``, ``record``s metrics (which
+keeps the historical ``name,value,note`` CSV stdout format), and
+``write``s ``BENCH_<name>.json`` — so the SAME numbers a human reads in
+the CI log drive ``scripts/bench_gate.py``'s regression comparison
+against the committed baselines in ``benchmarks/baselines/``.
+
+JSON schema (consumed by the gate)::
+
+    {"bench": "<name>",
+     "metrics": {"<key>": {"value": <number|bool|str>, "note": "..."}},
+     "config": {...}}
+
+Metric keys must be unique per bench; ``record`` takes an explicit
+``key=`` for families that print the same CSV name with distinguishing
+notes (e.g. ``ckpt_commit_blocking_s`` per mode x shard count), and
+suffixes ``#2``, ``#3``... on accidental collisions rather than silently
+overwriting.  ``BENCH_DIR`` overrides the output directory (default cwd).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+
+def _jsonable(value: Any) -> Any:
+    if isinstance(value, (np.bool_,)):
+        return bool(value)
+    if isinstance(value, np.integer):
+        return int(value)
+    if isinstance(value, np.floating):
+        return float(value)
+    return value
+
+
+class Bench:
+    def __init__(self, name: str):
+        self.name = name
+        self.metrics: Dict[str, Dict[str, Any]] = {}
+        self.config: Dict[str, Any] = {}
+
+    def record(self, metric: str, value: Any, note: str = "", *,
+               key: Optional[str] = None, fmt: Optional[str] = None) -> Any:
+        """Print the historical ``metric,value,note`` CSV row and store the
+        RAW value under ``key`` (default: the metric name) for the JSON
+        dump.  ``fmt`` only affects the printed form."""
+        display = format(value, fmt) if fmt else value
+        print(f"{metric},{display},{note}", flush=True)
+        k = key or metric
+        if k in self.metrics:
+            i = 2
+            while f"{k}#{i}" in self.metrics:
+                i += 1
+            k = f"{k}#{i}"
+        self.metrics[k] = {"value": _jsonable(value), "note": note}
+        return value
+
+    def set_config(self, **kw):
+        self.config.update({k: _jsonable(v) for k, v in kw.items()})
+
+    def write(self, out_dir: Optional[str] = None) -> str:
+        out_dir = out_dir or os.environ.get("BENCH_DIR", ".")
+        os.makedirs(out_dir, exist_ok=True)
+        path = os.path.join(out_dir, f"BENCH_{self.name}.json")
+        doc = {"bench": self.name, "metrics": self.metrics,
+               "config": self.config}
+        with open(path, "w") as f:
+            json.dump(doc, f, indent=2)
+        print(f"bench_json,{path},written", flush=True)
+        return path

@@ -1,19 +1,30 @@
 """Benchmark runner: one module per paper table/figure + system benches.
 
-Prints ``name,value,derived`` CSV rows (assignment format).  Roofline /
-dry-run reporting lives in launch/dryrun.py + roofline/report.py because it
-needs the 512-device environment.
+Prints ``name,value,derived`` CSV rows (assignment format) AND — through
+the shared harness (benchmarks/harness.py) — writes one
+``BENCH_<name>.json`` per bench, the machine-readable results that
+``scripts/bench_gate.py`` compares against the committed baselines in
+``benchmarks/baselines/`` (the CI perf-regression gate).
+
+Roofline / dry-run reporting lives in launch/dryrun.py +
+roofline/report.py because it needs the 512-device environment.
 """
 from __future__ import annotations
 
+import os
 import sys
 import time
+
+# run.py is invoked as a script (``python benchmarks/run.py``): put the
+# repo root on the path so ``benchmarks`` resolves as a package and the
+# bench modules share one harness import
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
 def main() -> None:
     from benchmarks import (bench_latency, bench_table1, bench_flit,
                             bench_checkpoint, bench_cluster,
-                            bench_model_fuzz, bench_serve)
+                            bench_model_fuzz, bench_placement, bench_serve)
     modules = [
         ("fig5 latency model", bench_latency),
         ("table1 transaction mapping", bench_table1),
@@ -22,6 +33,7 @@ def main() -> None:
         ("multi-writer cluster protocol", bench_cluster),
         ("continuous-batching serving (static vs slots)", bench_serve),
         ("vectorized semantics fuzzing", bench_model_fuzz),
+        ("cost-driven placement over emulated topologies", bench_placement),
     ]
     for title, mod in modules:
         print(f"# --- {title} ---", flush=True)

@@ -1,0 +1,155 @@
+"""Perf-regression gate: compare BENCH_*.json against committed baselines.
+
+The ROADMAP's so-far-invisible performance trajectory, made enforceable:
+every bench emits ``BENCH_<name>.json`` through the shared harness
+(benchmarks/harness.py), and this comparator fails CI when a gated
+metric regresses beyond its per-metric tolerance vs the baselines
+committed in ``benchmarks/baselines/``.
+
+Baseline schema — one ``<name>.json`` per bench::
+
+    {"bench": "<name>",
+     "metrics": {
+        "<key>": {"value": <v>, "direction": "higher"|"lower"|"exact",
+                  "rel_tol": 0.1, "abs_tol": 0.0}}}
+
+Per metric, with ``tol = max(abs_tol, rel_tol * |value|)``:
+
+* ``higher`` — higher is better; FAIL iff actual < value - tol
+  (improvements never fail; use for throughputs, speedups, win counts);
+* ``lower``  — lower is better; FAIL iff actual > value + tol
+  (latencies, overheads);
+* ``exact``  — FAIL iff |actual - value| > tol (deterministic model
+  outputs: calibrated latencies, mapping counts, violation counts;
+  non-numeric values compare by equality).
+
+Only metrics present in a baseline are gated — noisy wall-clock metrics
+simply stay out of the baseline files.  A gated metric MISSING from the
+bench output fails (deleted coverage is a regression too), as does a
+missing BENCH json for a baseline'd bench.
+
+Exit status: 0 = all gates pass, 1 = any regression (the CI contract;
+tests/test_bench_gate.py locks the nonzero-on-regression behaviour).
+
+Usage::
+
+    python scripts/bench_gate.py [--baselines benchmarks/baselines]
+                                 [--bench-dir .] [--only name ...]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+from typing import List, Optional, Tuple
+
+
+def _tol(spec: dict) -> float:
+    value = spec["value"]
+    rel = float(spec.get("rel_tol", 0.0))
+    abs_ = float(spec.get("abs_tol", 0.0))
+    try:
+        return max(abs_, rel * abs(float(value)))
+    except (TypeError, ValueError):
+        return 0.0
+
+
+def check_metric(key: str, spec: dict, actual) -> Optional[str]:
+    """None if the gate passes, else a human-readable failure reason."""
+    baseline = spec["value"]
+    direction = spec.get("direction", "exact")
+    if isinstance(baseline, bool) or not isinstance(baseline, (int, float)):
+        mismatch = (bool(actual) != baseline if isinstance(baseline, bool)
+                    else actual != baseline)
+        return (f"expected {baseline!r}, got {actual!r}" if mismatch
+                else None)
+    try:
+        a = float(actual)
+    except (TypeError, ValueError):
+        return f"non-numeric actual {actual!r} vs baseline {baseline}"
+    tol = _tol(spec)
+    if direction == "higher":
+        if a < baseline - tol:
+            return f"{a:g} < {baseline:g} - tol {tol:g} (higher is better)"
+    elif direction == "lower":
+        if a > baseline + tol:
+            return f"{a:g} > {baseline:g} + tol {tol:g} (lower is better)"
+    elif direction == "exact":
+        if abs(a - baseline) > tol:
+            return f"{a:g} != {baseline:g} (tol {tol:g})"
+    else:
+        return f"unknown direction {direction!r} in baseline"
+    return None
+
+
+def gate_bench(baseline_path: str, bench_dir: str) -> Tuple[str, List[str]]:
+    """Gate one bench; returns (bench name, failure messages)."""
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    name = baseline["bench"]
+    bench_path = os.path.join(bench_dir, f"BENCH_{name}.json")
+    if not os.path.exists(bench_path):
+        return name, [f"missing {bench_path} (bench did not run?)"]
+    with open(bench_path) as f:
+        result = json.load(f)
+    metrics = result.get("metrics", {})
+    failures = []
+    for key, spec in baseline.get("metrics", {}).items():
+        if key not in metrics:
+            failures.append(f"{key}: gated metric missing from bench output")
+            continue
+        reason = check_metric(key, spec, metrics[key].get("value"))
+        if reason is not None:
+            failures.append(f"{key}: {reason}")
+    return name, failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baselines", default="benchmarks/baselines",
+                    help="directory of committed baseline jsons")
+    ap.add_argument("--bench-dir", default=".",
+                    help="directory holding the BENCH_*.json outputs")
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="gate only these bench names")
+    args = ap.parse_args(argv)
+
+    paths = sorted(glob.glob(os.path.join(args.baselines, "*.json")))
+    if not paths:
+        print(f"bench-gate: no baselines under {args.baselines}",
+              file=sys.stderr)
+        return 1
+    by_name = {}
+    for p in paths:
+        with open(p) as f:
+            by_name[json.load(f)["bench"]] = p
+    if args.only is not None:
+        unknown = sorted(set(args.only) - set(by_name))
+        if unknown:
+            # a typo'd/renamed bench must not silently gate NOTHING
+            print(f"bench-gate: no baseline for {unknown} "
+                  f"(have: {sorted(by_name)})", file=sys.stderr)
+            return 1
+        by_name = {n: by_name[n] for n in args.only}
+    total_gated = n_fail = 0
+    for name, p in sorted(by_name.items()):
+        name, failures = gate_bench(p, args.bench_dir)
+        with open(p) as f:
+            n_metrics = len(json.load(f).get("metrics", {}))
+        total_gated += n_metrics
+        if failures:
+            n_fail += 1
+            print(f"FAIL {name} ({len(failures)}/{n_metrics} gates):")
+            for msg in failures:
+                print(f"  - {msg}")
+        else:
+            print(f"PASS {name} ({n_metrics} gates)")
+    print(f"bench-gate: {total_gated} gated metrics, "
+          f"{n_fail} failing bench(es)")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

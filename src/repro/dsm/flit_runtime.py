@@ -59,6 +59,11 @@ from repro.dsm.tiers import TierManager
 
 COMMIT_MODES = ("sync", "async", "sharded", "sharded-async")
 
+#: not a schedule itself: a committer built with ``mode=AUTO_MODE`` defers
+#: to its PlacementPolicy at the first commit, which prices the flush
+#: under the active topology and resolves to one of COMMIT_MODES
+AUTO_MODE = "auto"
+
 #: fault-injection points inside the commit window
 KILL_POINTS = ("pre_flush", "mid_flush", "post_completeOp")
 
@@ -91,12 +96,21 @@ class DurableCommitter:
                  n_shards: Optional[int] = None,
                  retention: Optional[int] = None,
                  fault_hook: Optional[Callable[[str, int], None]] = None,
+                 placement: Optional[Any] = None,
                  complete_fn: Optional[
                      Callable[[int, Dict[str, Any], Optional[dict]],
                               int]] = None):
-        assert mode in COMMIT_MODES, mode
+        assert mode in COMMIT_MODES + (AUTO_MODE,), mode
+        assert mode != AUTO_MODE or placement is not None, \
+            "mode='auto' needs a PlacementPolicy to resolve the schedule"
         self.tiers = tiers
         self.mode = mode
+        #: cost-driven placement (repro.dsm.placement).  When set, the
+        #: shard count comes from ``placement.choose_shards`` (sized by
+        #: the actual state bytes under the active topology) instead of
+        #: the device-count heuristic, and ``mode="auto"`` resolves to
+        #: the policy's schedule choice at the first commit.
+        self.placement = placement
         self.replicate_to = replicate_to     # peer for RStore staging (a
         #                                      TierManager or any object
         #                                      with a .staging mapping, e.g.
@@ -122,15 +136,33 @@ class DurableCommitter:
         if self.fault_hook is not None:
             self.fault_hook(point, step)
 
+    def _hbm_bytes(self) -> int:
+        # emu.tree_nbytes is THE byte-counting used everywhere the
+        # placement policy is fed sizes (kvcache.spill_auto, cluster
+        # ranks) — one definition, so the same state never prices
+        # differently across call sites
+        from repro.dsm.emu import tree_nbytes
+        return tree_nbytes(dict(self.tiers.hbm))
+
     def _resolve_shards(self) -> int:
         """Lazy auto shard count: sized from the actual HBM state volume
-        at the first sharded flush."""
+        at the first sharded flush — by the placement policy's cost model
+        when one is configured, else the device-count heuristic."""
         if self.n_shards is None:
-            total = sum(int(getattr(l, "nbytes", 0))
-                        for tree in self.tiers.hbm.values()
-                        for l in jax.tree_util.tree_leaves(tree))
-            self.n_shards = auto_shard_count(total)
+            total = self._hbm_bytes()
+            self.n_shards = (self.placement.choose_shards(total)
+                             if self.placement is not None
+                             else auto_shard_count(total))
         return self.n_shards
+
+    def _resolve_mode(self) -> str:
+        """``mode="auto"`` defers the schedule choice until the first
+        commit, when the real state volume is known: the placement policy
+        prices the flush under its topology and picks sync vs
+        sharded-async (logged as a ``schedule`` decision)."""
+        if self.mode == AUTO_MODE:
+            self.mode = self.placement.choose_schedule(self._hbm_bytes())
+        return self.mode
 
     def _complete_op(self, step: int, written: Dict[str, Any],
                      meta, t0, label: str) -> CommitStats:
@@ -173,6 +205,7 @@ class DurableCommitter:
         PREVIOUS step whose flushes were just joined (None on the first
         call)."""
         t0 = time.perf_counter()
+        self._resolve_mode()
         if self.mode == "async":
             return self._commit_async(step, meta, t0)
         if self.mode == "sharded-async":

@@ -1,0 +1,153 @@
+"""Cost-driven tier placement under an emulated CXL topology.
+
+The runtime used to hard-code its placement choices: the committer's
+shard count came from ``auto_shard_count`` (device count, topology-blind),
+the KV-cache manager spilled wherever the caller said, and cluster ranks
+ring-staged unconditionally.  ``PlacementPolicy`` replaces those choices
+with cost-model decisions priced by the SAME functions the topology
+emulator uses (repro.dsm.emu), so under ``cxl11-direct`` the policy
+behaves like the calibrated paper pair and under ``cxl30-fabric`` it
+exploits link fan-out — and every decision is logged and assertable.
+
+Three decisions, all per object size under the active topology:
+
+* ``choose_spill``    — host RStore-staging vs pool for an evicted
+  object.  Staging is cheap (cache-to-cache path) but volatile: with
+  probability ``p_peer_loss`` the peer holding the copy crashes and the
+  object must be REPLAYED (recomputed) at ``replay_ns_per_byte``.  The
+  pool is durable but pays remote flush + restore (+ fixed manifest/CRC
+  overhead).  The policy picks the lower EXPECTED cost;
+* ``choose_shards``   — argmin over shard counts of the modelled sharded
+  flush wall time (``emu.sharded_flush_ns``): setup cost per extra
+  pipeline vs link fan-out.  Direct-attach (1 link) collapses to 1;
+  fabric picks up to its 8 links for large states;
+* ``choose_schedule`` — ``sync`` when the modelled blocking flush is
+  below ``sync_threshold_ns`` (double-buffering would buy nothing),
+  ``sharded-async`` otherwise.
+
+Wiring (each opt-in, defaults unchanged):
+
+* ``DurableCommitter(placement=...)`` resolves its shard count — and,
+  with ``mode="auto"``, its schedule — from the policy at first commit;
+* ``TieredKVCache(placement=...)`` gains ``spill_auto`` which routes an
+  evicted session cache to staging or (sharded) pool per decision;
+* cluster ranks call ``plan_rank_staging`` to decide whether ring
+  RStore-staging their partition every step is worth its cost
+  (``scenarios/cluster_worker.py --topology``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List
+
+from repro.dsm.emu import (Topology, get_topology, rload_pool_ns,
+                           rload_staging_ns, rstore_ns, sharded_flush_ns)
+
+
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    """One logged placement decision: what was chosen for which object,
+    and the modelled cost of every alternative (ns) — so tests and the
+    bench can assert WHY, not just what."""
+    kind: str                    # "spill" | "shards" | "schedule" | "staging"
+    name: str
+    nbytes: int
+    choice: Any
+    costs: Dict[str, float]
+    topology: str
+
+
+class PlacementPolicy:
+    def __init__(self, topology, *,
+                 p_peer_loss: float = 0.05,
+                 replay_ns_per_byte: float = 0.2,
+                 sync_threshold_ns: float = 1e6,
+                 max_shards: int = 16,
+                 restore_fraction: float = 1.0):
+        """``p_peer_loss``: probability the peer holding a staged-only copy
+        crashes before the copy is consumed (the CXL0 cache-loss model);
+        ``replay_ns_per_byte``: recompute cost of a lost copy;
+        ``restore_fraction``: fraction of spilled objects later read back
+        (1.0 = every spill is restored, the serving eviction pattern)."""
+        self.topology: Topology = get_topology(topology)
+        self.p_peer_loss = p_peer_loss
+        self.replay_ns_per_byte = replay_ns_per_byte
+        self.sync_threshold_ns = sync_threshold_ns
+        self.max_shards = max_shards
+        self.restore_fraction = restore_fraction
+        self.decisions: List[Decision] = []
+
+    def _log(self, kind: str, name: str, nbytes: int, choice,
+             costs: Dict[str, float]) -> Decision:
+        d = Decision(kind, name, int(nbytes), choice, dict(costs),
+                     self.topology.name)
+        self.decisions.append(d)
+        return d
+
+    def decisions_for(self, kind: str) -> List[Decision]:
+        return [d for d in self.decisions if d.kind == kind]
+
+    # -- spill tier ----------------------------------------------------------
+    def spill_costs(self, nbytes: int) -> Dict[str, float]:
+        """Expected end-to-end ns of evicting + later consuming one object
+        per tier.  Staging: RStore now; with p_peer_loss the peer dies and
+        the object is replayed, else it is read back from the buffer.
+        Pool: best-shard-count durable flush now, remote restore later."""
+        t = self.topology
+        staging = (rstore_ns(t, nbytes)
+                   + self.p_peer_loss * self.replay_ns_per_byte * nbytes
+                   + (1.0 - self.p_peer_loss) * self.restore_fraction
+                   * rload_staging_ns(t, nbytes))
+        k = self.choose_shards(nbytes, log=False)
+        pool = (sharded_flush_ns(t, nbytes, k)
+                + self.restore_fraction * rload_pool_ns(t, nbytes))
+        return {"staging": staging, "pool": pool}
+
+    def choose_spill(self, name: str, nbytes: int) -> str:
+        costs = self.spill_costs(nbytes)
+        choice = min(costs, key=costs.get)
+        self._log("spill", name, nbytes, choice, costs)
+        return choice
+
+    # -- shard count ---------------------------------------------------------
+    def choose_shards(self, nbytes: int, name: str = "state", *,
+                      log: bool = True) -> int:
+        """Argmin of the modelled sharded-flush wall time.  Candidates stop
+        at 2x the link count (beyond that streams only share links and pay
+        setup) capped by ``max_shards``."""
+        t = self.topology
+        hi = max(1, min(self.max_shards, 2 * t.n_links))
+        costs = {k: sharded_flush_ns(t, nbytes, k)
+                 for k in range(1, hi + 1)}
+        best = min(costs, key=costs.get)
+        if log:
+            self._log("shards", name, nbytes, best,
+                      {f"k{k}": v for k, v in costs.items()})
+        return best
+
+    # -- flush schedule ------------------------------------------------------
+    def choose_schedule(self, nbytes: int, name: str = "state") -> str:
+        """``sync`` when the modelled blocking flush is too small for
+        double-buffering to pay for its join bookkeeping, else the
+        production ``sharded-async`` schedule."""
+        k = self.choose_shards(nbytes, name, log=False)
+        flush = sharded_flush_ns(self.topology, nbytes, k)
+        choice = "sync" if flush < self.sync_threshold_ns else "sharded-async"
+        self._log("schedule", name, nbytes, choice,
+                  {"flush_ns": flush,
+                   "sync_threshold_ns": self.sync_threshold_ns})
+        return choice
+
+
+def plan_rank_staging(policy: PlacementPolicy, nbytes: int,
+                      name: str = "partition") -> bool:
+    """Should a cluster rank RStore-stage its ``nbytes`` partition into its
+    ring sibling every step?  Yes iff the policy's spill model prefers the
+    staging tier for this size under the active topology — otherwise the
+    per-step RStore is dead weight and recovery should come from the pool
+    (which the commit cadence already feeds).  Logged as a ``staging``
+    decision."""
+    costs = policy.spill_costs(nbytes)
+    choice = costs["staging"] <= costs["pool"]
+    policy._log("staging", name, nbytes, choice, costs)
+    return choice

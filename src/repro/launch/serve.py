@@ -22,7 +22,8 @@ import time
 
 import jax
 
-from repro.dsm.flit_runtime import COMMIT_MODES
+from repro.dsm.emu import PRESETS
+from repro.dsm.flit_runtime import AUTO_MODE, COMMIT_MODES
 from repro.parallel.sharding import ctx_for_mesh
 from repro.serve.engine import build_serve_engine, servable_archs
 from repro.serve.trace import synthetic_trace, trace_t_max
@@ -47,7 +48,13 @@ def main():
                     help="DSM pool dir: enables durable sessions + resume")
     ap.add_argument("--commit-every", type=int, default=4,
                     help="session-commit cadence in decode ticks")
-    ap.add_argument("--commit-mode", default="sync", choices=COMMIT_MODES)
+    ap.add_argument("--commit-mode", default="sync",
+                    choices=COMMIT_MODES + (AUTO_MODE,),
+                    help="flush schedule; 'auto' defers to the placement "
+                         "policy (requires --topology)")
+    ap.add_argument("--topology", default=None, choices=sorted(PRESETS),
+                    help="emulated CXL topology: cost-driven commit shard "
+                         "count (and schedule, with --commit-mode auto)")
     ap.add_argument("--retire-done", action="store_true",
                     help="drop finished sessions from the committed table "
                          "(bounds commit cost for long-lived serving; "
@@ -55,6 +62,11 @@ def main():
     ap.add_argument("--restore-mode", default="cache",
                     choices=["cache", "replay"])
     args = ap.parse_args()
+    if args.commit_mode == AUTO_MODE and args.topology is None:
+        ap.error("--commit-mode auto requires --topology")
+    if args.topology is not None and args.pool is None:
+        ap.error("--topology drives durable-commit placement: it needs "
+                 "--pool (stateless serving has nothing to place)")
 
     n_dev = jax.device_count()
     mesh = jax.make_mesh((max(n_dev // args.mesh_model, 1),
@@ -70,7 +82,7 @@ def main():
         t_max=trace_t_max(trace), ctx=ctx, pool_path=args.pool,
         commit_every=args.commit_every, commit_mode=args.commit_mode,
         restore_mode=args.restore_mode, retire_done=args.retire_done,
-        seed=args.seed)
+        seed=args.seed, topology=args.topology)
     # regenerate with the real vocab now the config is known
     trace = synthetic_trace(args.requests, seed=args.seed,
                             prompt_lens=(args.prompt_len,),

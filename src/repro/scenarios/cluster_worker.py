@@ -118,9 +118,25 @@ class ClusterWorker:
                                      confirm=fault_hook is not None,
                                      retention=args.retention or None,
                                      timeout=args.timeout)
+        # cost-driven placement (--topology): the policy decides whether
+        # ring RStore-staging this rank's partition is worth its per-step
+        # cost under the emulated topology, and sizes the shard pipelines
+        # from the partition bytes instead of the fixed --shards
+        self.placement = None
+        self._stage_to_sibling = bool(args.replicate)
+        n_shards = args.shards
+        if getattr(args, "topology", None):
+            from repro.dsm.emu import tree_nbytes
+            from repro.dsm.placement import (PlacementPolicy,
+                                             plan_rank_staging)
+            self.placement = PlacementPolicy(args.topology)
+            part_bytes = tree_nbytes(self.state_objects())
+            self._stage_to_sibling = (args.replicate and plan_rank_staging(
+                self.placement, part_bytes))
+            n_shards = None             # resolved by the policy per bytes
         self.committer = DurableCommitter(
-            self.tiers, mode="sharded", n_shards=args.shards,
-            fault_hook=fault_hook,
+            self.tiers, mode="sharded", n_shards=n_shards,
+            fault_hook=fault_hook, placement=self.placement,
             complete_fn=self.proto.cluster_complete,
             replicate_to=self._proxy())
         self.step_done = -1          # last step whose update is applied
@@ -128,7 +144,7 @@ class ClusterWorker:
         self.source_used: Optional[str] = None
 
     def _proxy(self):
-        if not self.args.replicate:
+        if not self._stage_to_sibling:
             return None
         return self.staging.proxy(ring_sibling(self.rank, self.live))
 
@@ -214,6 +230,16 @@ class ClusterWorker:
         self.tensors = {
             t: {k: np.asarray(v) for k, v in d.items()}
             for t, d in placed.items()}
+        if self.placement is not None:
+            # partition sizes changed: re-price the staging decision and
+            # let the next commit re-resolve the shard count from the
+            # post-shrink partition bytes
+            self.committer.n_shards = None
+            if self.args.replicate:
+                from repro.dsm.emu import tree_nbytes
+                from repro.dsm.placement import plan_rank_staging
+                self._stage_to_sibling = plan_rank_staging(
+                    self.placement, tree_nbytes(self.state_objects()))
         self.committer.replicate_to = self._proxy()
 
     def _crash_shrink(self, victim: int):
@@ -357,6 +383,11 @@ def main(argv=None) -> int:
                          "stays inspectable)")
     ap.add_argument("--timeout", type=float, default=120.0,
                     help="rendezvous timeout (s)")
+    ap.add_argument("--topology", default=None,
+                    help="emulated CXL topology preset (dsm.emu.PRESETS); "
+                         "when set, the placement policy decides ring "
+                         "staging and shard count from the partition "
+                         "bytes (--replicate 0 still forces pool-only)")
     ap.add_argument("--kill-point", default="none",
                     choices=("none",) + KILL_POINTS)
     ap.add_argument("--kill-step", type=int, default=3)

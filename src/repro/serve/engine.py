@@ -85,7 +85,8 @@ class ServeEngine:
                                     donate_argnums=(2,))
 
         self.kv = TieredKVCache(bundle, n_slots, t_max,
-                                tiers=store.tiers if store else None)
+                                tiers=store.tiers if store else None,
+                                placement=getattr(store, "placement", None))
         self._caches1 = bundle.init_caches(jax.random.PRNGKey(0), 1, t_max)
         self.sched = SlotScheduler(n_slots)
         self.sessions: Dict[str, Session] = {}
@@ -303,7 +304,8 @@ def build_serve_engine(arch: str = "olmo-1b", *, smoke: bool = True,
                        commit_every: int = 0, commit_mode: str = "sync",
                        n_shards: Optional[int] = None, retention: int = 2,
                        fault_hook=None, restore_mode: str = "cache",
-                       retire_done: bool = False, seed: int = 0):
+                       retire_done: bool = False, seed: int = 0,
+                       topology: Optional[str] = None):
     """One-stop construction shared by the launcher, the example and the
     killable scenario worker: config -> bundle -> (sharded) params ->
     optional durable session store -> engine.  Returns (engine, cfg).
@@ -325,9 +327,15 @@ def build_serve_engine(arch: str = "olmo-1b", *, smoke: bool = True,
             jax.device_put, params, shardings_for(ctx, bundle.descs))
     store = None
     if pool_path is not None:
+        placement = None
+        if topology is not None:
+            # cost-driven shard count (and, with commit_mode="auto", the
+            # schedule) under the named emulated topology
+            from repro.dsm.placement import PlacementPolicy
+            placement = PlacementPolicy(topology)
         store = SessionStore(DSMPool(pool_path), mode=commit_mode,
                              n_shards=n_shards, retention=retention,
-                             fault_hook=fault_hook)
+                             fault_hook=fault_hook, placement=placement)
     engine = ServeEngine(bundle, params, n_slots=n_slots, t_max=t_max,
                          ctx=ctx, store=store, commit_every=commit_every,
                          restore_mode=restore_mode, retire_done=retire_done)

@@ -23,6 +23,10 @@ Cold sessions leave HBM through the CXL0 tiers (``dsm.tiers``):
   pool, leaves partitioned into byte-balanced blocks
   (``pool.partition_leaves`` under ``rflush_sharded``); returns the
   manifest entry needed to restore;
+* ``spill_auto(name, cache1, peer=...)`` — cost-driven routing: the
+  placement policy (``dsm.placement``) prices staging vs (sharded) pool
+  for this cache's size under the active emulated topology and picks the
+  cheaper tier — the decision is logged on the policy;
 * ``restore(name, entry=...)``       — best tier first: HBM host object,
   then peer staging, then pool — byte-identical round-trip in all cases
   (raw-view npz storage preserves bf16 et al. exactly).
@@ -42,10 +46,14 @@ from repro.train.step import cache_batch_axes
 
 class TieredKVCache:
     def __init__(self, bundle, n_slots: int, t_max: int,
-                 tiers: Optional[TierManager] = None):
+                 tiers: Optional[TierManager] = None,
+                 placement=None):
         self.n_slots = n_slots
         self.t_max = t_max
         self.tiers = tiers
+        #: cost-driven spill routing (repro.dsm.placement.PlacementPolicy);
+        #: when set, ``spill_auto`` replaces the caller-chosen tier.
+        self.placement = placement
         self.axes = cache_batch_axes(bundle)
         # zero-initialized batched cache (cache descs are init="zeros")
         self.caches = bundle.init_caches(jax.random.PRNGKey(0), n_slots,
@@ -110,6 +118,25 @@ class TieredKVCache:
         n = n_blocks or len(self.block_layout())
         obj = t.rflush_sharded(name, n)
         return manifest_entry(obj)
+
+    def spill_auto(self, name: str, cache1: Any, *,
+                   peer: Optional[TierManager] = None) -> dict:
+        """Cost-driven eviction: the placement policy prices staging vs
+        pool for THIS cache's size under the active topology and routes
+        accordingly (decision logged on the policy).  Returns
+        ``{"tier": ..., ...}`` — pass ``entry`` (pool spills) back into
+        ``restore``.  A staging choice with no peer degrades to the host
+        object tier alone (still restorable while we live)."""
+        assert self.placement is not None, "no PlacementPolicy configured"
+        from repro.dsm.emu import tree_nbytes
+        nbytes = tree_nbytes(cache1)
+        tier = self.placement.choose_spill(name, nbytes)
+        if tier == "staging":
+            return {"tier": "staging", "nbytes": nbytes,
+                    "version": self.spill(name, cache1, peer=peer)}
+        n = self.placement.choose_shards(nbytes, name)
+        return {"tier": "pool", "nbytes": nbytes,
+                "entry": self.spill_durable(name, cache1, n_blocks=n)}
 
     def restore(self, name: str, entry: Optional[dict] = None,
                 *, drop_hot: bool = False) -> Optional[Any]:

@@ -87,12 +87,13 @@ class SessionStore:
     def __init__(self, pool: DSMPool, *, worker_id: int = 0,
                  mode: str = "sync", n_shards: Optional[int] = None,
                  retention: Optional[int] = 2,
-                 fault_hook=None):
+                 fault_hook=None, placement=None):
         self.pool = pool
         self.tiers = TierManager(pool, worker_id)
+        self.placement = placement      # cost-driven shard count/schedule
         self.committer = DurableCommitter(
             self.tiers, mode=mode, n_shards=n_shards, retention=retention,
-            fault_hook=fault_hook)
+            fault_hook=fault_hook, placement=placement)
         self.recovery = RecoveryManager(pool)
 
     # -- commit side ---------------------------------------------------------

@@ -90,6 +90,9 @@ def run_durable_loop(
     commit_every: int = 5,
     commit_mode: str = "sharded-async",   # the production default schedule
     n_shards: Optional[int] = None,      # sharded modes; None = per-device
+    placement=None,         # PlacementPolicy: cost-driven shard count (and,
+    #                         with commit_mode="auto", the schedule) under
+    #                         an emulated topology — see repro.dsm.placement
     retention: Optional[int] = None,     # keep newest k manifests (GC)
     worker_id: int = 0,
     peer_tiers=None,            # one peer, or a sequence of peers: anything
@@ -122,7 +125,7 @@ def run_durable_loop(
     tiers = TierManager(pool, worker_id)
     committer = DurableCommitter(
         tiers, mode=commit_mode, n_shards=n_shards, retention=retention,
-        fault_hook=fault_hook,
+        fault_hook=fault_hook, placement=placement,
         replicate_to=peers[0] if (replicate and peers) else None)
     recovery = RecoveryManager(pool)
     templates = _state_objects(init_state, pipeline.state)

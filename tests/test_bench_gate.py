@@ -1,0 +1,159 @@
+"""The perf-regression gate (scripts/bench_gate.py) + the shared bench
+harness (benchmarks/harness.py): the gate MUST exit nonzero on a
+synthetically regressed BENCH json (the CI contract), pass on matching
+output, and treat missing metrics/files as regressions.  The committed
+baselines themselves are validated for schema."""
+import glob
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, REPO)                 # scripts/ + benchmarks/ packages
+
+from benchmarks.harness import Bench                        # noqa: E402
+from scripts.bench_gate import check_metric, gate_bench, main  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# harness
+# ---------------------------------------------------------------------------
+
+def test_harness_writes_bench_json(tmp_path, capsys):
+    b = Bench("demo")
+    b.set_config(n=3)
+    b.record("m_float", 1.25, "a note", fmt=".1f")
+    b.record("m_int", 7)
+    b.record("m_bool", True, "flag")
+    b.record("family", 1.0, "mode=x", key="family.x")
+    b.record("family", 2.0, "mode=y", key="family.y")
+    path = b.write(str(tmp_path))
+    out = capsys.readouterr().out
+    assert "m_float,1.2,a note" in out          # CSV format kept (fmt)
+    assert "family,2.0,mode=y" in out
+    doc = json.load(open(path))
+    assert doc["bench"] == "demo"
+    assert doc["config"] == {"n": 3}
+    assert doc["metrics"]["m_float"]["value"] == 1.25   # raw, not formatted
+    assert doc["metrics"]["family.x"]["value"] == 1.0
+    assert doc["metrics"]["family.y"]["value"] == 2.0
+    assert doc["metrics"]["m_bool"]["value"] is True
+
+
+def test_harness_collisions_never_overwrite(tmp_path):
+    b = Bench("demo")
+    b.record("m", 1)
+    b.record("m", 2)
+    b.record("m", 3)
+    assert [b.metrics[k]["value"] for k in ("m", "m#2", "m#3")] == [1, 2, 3]
+
+
+# ---------------------------------------------------------------------------
+# per-metric comparison
+# ---------------------------------------------------------------------------
+
+def test_check_metric_directions():
+    higher = {"value": 10.0, "direction": "higher", "rel_tol": 0.1}
+    assert check_metric("k", higher, 9.5) is None        # inside tolerance
+    assert check_metric("k", higher, 20.0) is None       # improvement
+    assert check_metric("k", higher, 8.0) is not None    # regression
+    lower = {"value": 10.0, "direction": "lower", "abs_tol": 1.0}
+    assert check_metric("k", lower, 10.9) is None
+    assert check_metric("k", lower, 12.0) is not None
+    exact = {"value": 4, "direction": "exact"}
+    assert check_metric("k", exact, 4) is None
+    assert check_metric("k", exact, 5) is not None
+
+
+def test_check_metric_bool_and_string():
+    assert check_metric("k", {"value": True}, True) is None
+    assert check_metric("k", {"value": True}, False) is not None
+    assert check_metric("k", {"value": "9s/15p"}, "9s/15p") is None
+    assert check_metric("k", {"value": "9s/15p"}, "8s/16p") is not None
+
+
+# ---------------------------------------------------------------------------
+# the gate end to end
+# ---------------------------------------------------------------------------
+
+def _setup(tmp_path, actual_value):
+    bdir = tmp_path / "baselines"
+    bdir.mkdir()
+    (bdir / "demo.json").write_text(json.dumps({
+        "bench": "demo",
+        "metrics": {"speed": {"value": 100.0, "direction": "higher",
+                              "rel_tol": 0.05}}}))
+    b = Bench("demo")
+    b.record("speed", actual_value)
+    b.write(str(tmp_path))
+    return bdir
+
+
+def test_gate_passes_on_healthy_output(tmp_path):
+    bdir = _setup(tmp_path, 99.0)        # within 5%
+    assert main(["--baselines", str(bdir),
+                 "--bench-dir", str(tmp_path)]) == 0
+
+
+def test_gate_fails_on_synthetic_regression(tmp_path):
+    bdir = _setup(tmp_path, 80.0)        # 20% below baseline
+    assert main(["--baselines", str(bdir),
+                 "--bench-dir", str(tmp_path)]) == 1
+
+
+def test_gate_fails_on_missing_metric_and_missing_file(tmp_path):
+    bdir = _setup(tmp_path, 99.0)
+    # gated metric deleted from the bench output
+    out = tmp_path / "BENCH_demo.json"
+    doc = json.loads(out.read_text())
+    doc["metrics"] = {}
+    out.write_text(json.dumps(doc))
+    assert main(["--baselines", str(bdir),
+                 "--bench-dir", str(tmp_path)]) == 1
+    # bench output missing entirely
+    out.unlink()
+    name, failures = gate_bench(str(bdir / "demo.json"), str(tmp_path))
+    assert name == "demo" and failures
+    assert main(["--baselines", str(bdir),
+                 "--bench-dir", str(tmp_path)]) == 1
+
+
+def test_gate_fails_with_no_baselines(tmp_path):
+    (tmp_path / "empty").mkdir()
+    assert main(["--baselines", str(tmp_path / "empty"),
+                 "--bench-dir", str(tmp_path)]) == 1
+
+
+def test_gate_cli_exit_status(tmp_path):
+    """The CI contract is the PROCESS exit code: run the real script."""
+    bdir = _setup(tmp_path, 50.0)        # regressed
+    r = subprocess.run(
+        [sys.executable, os.path.join(REPO, "scripts", "bench_gate.py"),
+         "--baselines", str(bdir), "--bench-dir", str(tmp_path)],
+        capture_output=True, text=True)
+    assert r.returncode == 1
+    assert "FAIL demo" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# committed baselines: schema sanity
+# ---------------------------------------------------------------------------
+
+def test_committed_baselines_schema():
+    paths = glob.glob(os.path.join(REPO, "benchmarks", "baselines",
+                                   "*.json"))
+    assert paths, "no committed baselines"
+    names = set()
+    for p in paths:
+        doc = json.load(open(p))
+        assert doc["bench"], p
+        names.add(doc["bench"])
+        for key, spec in doc.get("metrics", {}).items():
+            assert "value" in spec, (p, key)
+            assert spec.get("direction", "exact") in (
+                "higher", "lower", "exact"), (p, key)
+    # every bench module run.py sweeps has a baseline (even if empty, the
+    # gate then requires its BENCH json to exist)
+    assert {"latency", "table1", "flit", "model_fuzz", "placement",
+            "cluster", "checkpoint", "serve"} <= names

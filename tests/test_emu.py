@@ -1,0 +1,159 @@
+"""Emulated CXL topologies (repro.dsm.emu): preset taxonomy, pricing
+model shape, and — the property the CI bench gate stands on — trace
+determinism: the same (topology, seed, op sequence) always produces the
+identical priced trace, while instrumentation never changes TierManager
+behaviour."""
+import numpy as np
+import pytest
+
+from repro.core.latency import HOST, LATENCY_NS
+from repro.dsm.emu import (PRESETS, TopologyEmulator, attach_emulator,
+                           get_topology, lstore_ns, rflush_ns, rstore_ns,
+                           rload_pool_ns, sharded_flush_ns, tree_nbytes)
+from repro.dsm.pool import DSMPool
+from repro.dsm.tiers import TierManager
+
+
+# ---------------------------------------------------------------------------
+# presets
+# ---------------------------------------------------------------------------
+
+def test_three_presets_span_the_taxonomy():
+    assert set(PRESETS) == {"cxl11-direct", "cxl20-switched-pool",
+                            "cxl30-fabric"}
+    gens = {t.generation for t in PRESETS.values()}
+    assert gens == {"1.1", "2.0", "3.0"}
+    # the 1.1 preset IS the paper's calibrated pair: no scaling, no hop
+    direct = PRESETS["cxl11-direct"]
+    assert direct.remote_multiplier == 1.0
+    assert direct.switch_hop_ns == 0.0
+    assert direct.n_links == 1
+
+
+def test_presets_differ_in_remote_cost_and_fanout():
+    d, s, f = (PRESETS["cxl11-direct"], PRESETS["cxl20-switched-pool"],
+               PRESETS["cxl30-fabric"])
+    # deeper topologies pay more per remote access...
+    lat = [rflush_ns(t, 0) for t in (d, s, f)]
+    assert lat[0] < lat[1] < lat[2]
+    # ...but fan out wider
+    assert d.n_links < s.n_links < f.n_links
+    assert (d.aggregate_bw_gbps(8) < s.aggregate_bw_gbps(8)
+            < f.aggregate_bw_gbps(8))
+
+
+def test_direct_preset_matches_calibrated_table_at_zero_bytes():
+    t = get_topology("cxl11-direct")
+    assert rflush_ns(t, 0) == LATENCY_NS[(HOST, "rflush", "remote")]
+    assert lstore_ns(t, 0) == LATENCY_NS[(HOST, "lstore", "local")]
+
+
+def test_get_topology_rejects_unknown():
+    with pytest.raises(KeyError):
+        get_topology("cxl99-imaginary")
+
+
+# ---------------------------------------------------------------------------
+# pricing model shape
+# ---------------------------------------------------------------------------
+
+def test_costs_monotone_in_bytes():
+    for t in PRESETS.values():
+        for fn in (lstore_ns, rstore_ns, rflush_ns, rload_pool_ns):
+            assert fn(t, 1 << 20) < fn(t, 8 << 20)
+
+
+def test_sharding_beyond_links_never_helps():
+    for t in PRESETS.values():
+        nb = 64 << 20
+        at_links = sharded_flush_ns(t, nb, t.n_links)
+        assert sharded_flush_ns(t, nb, t.n_links + 4) >= at_links
+    # and on the single-link direct preset, any sharding is pure overhead
+    d = PRESETS["cxl11-direct"]
+    assert sharded_flush_ns(d, 64 << 20, 4) > sharded_flush_ns(d, 64 << 20, 1)
+
+
+def test_tree_nbytes():
+    tree = {"a": np.zeros(8, np.float32), "b": np.zeros((2, 4), np.int64)}
+    assert tree_nbytes(tree) == 8 * 4 + 8 * 8
+
+
+# ---------------------------------------------------------------------------
+# determinism + instrumentation
+# ---------------------------------------------------------------------------
+
+def _drive(tiers, peer):
+    """A fixed op sequence exercising every priced primitive."""
+    a = {"x": np.arange(64, dtype=np.float32),
+         "y": np.ones((8, 8), np.float32)}
+    tiers.lstore("obj", a)
+    tiers.rstore("obj", peer)
+    tiers.rflush("obj")
+    tiers.mstore("obj", a)
+    tiers.rflush_sharded("obj", 2)
+    tiers.flush_async("obj")
+    tiers.flush_wait("obj")
+    peer.rload("obj")           # peer-side read of the staged copy
+
+
+def _traced_run(tmp, seed):
+    emu = TopologyEmulator("cxl20-switched-pool", seed=seed)
+    tiers = attach_emulator(TierManager(DSMPool(f"{tmp}/pool"), 0), emu)
+    peer = attach_emulator(TierManager(DSMPool(f"{tmp}/peer"), 1),
+                           emu)
+    _drive(tiers, peer)
+    tiers.close()
+    return emu.trace
+
+
+def test_same_topology_and_seed_identical_priced_trace(tmp_path):
+    t1 = _traced_run(tmp_path / "a", seed=7)
+    t2 = _traced_run(tmp_path / "b", seed=7)
+    assert t1 == t2                      # dataclass equality: ops AND costs
+    assert len(t1) > 0
+    ops = [p.op for p in t1]
+    for expected in ("lstore", "rstore", "rflush", "mstore",
+                     "rflush_shard", "rload"):
+        assert expected in ops
+
+
+def test_different_seed_same_ops_different_costs(tmp_path):
+    t1 = _traced_run(tmp_path / "a", seed=0)
+    t2 = _traced_run(tmp_path / "b", seed=1)
+    assert [p.op for p in t1] == [p.op for p in t2]
+    assert [p.nbytes for p in t1] == [p.nbytes for p in t2]
+    assert any(x.cost_ns != y.cost_ns for x, y in zip(t1, t2))
+
+
+def test_reset_reprices_identically(tmp_path):
+    emu = TopologyEmulator("cxl30-fabric", seed=3)
+    tiers = attach_emulator(TierManager(DSMPool(str(tmp_path / "p")), 0),
+                            emu)
+    tiers.lstore("o", {"x": np.zeros(32, np.float32)})
+    tiers.rflush("o")
+    first = list(emu.trace)
+    emu.reset()
+    tiers.lstore("o", {"x": np.zeros(32, np.float32)})
+    tiers.rflush("o")
+    assert [p.cost_ns for p in emu.trace] == [p.cost_ns for p in first]
+
+
+def test_instrumentation_preserves_behaviour(tmp_path):
+    """Attaching the emulator must not change WHAT the tiers do — only
+    record what it would have cost."""
+    emu = TopologyEmulator("cxl11-direct")
+    tiers = attach_emulator(
+        TierManager(DSMPool(str(tmp_path / "pool")), 0), emu)
+    tree = {"w": np.arange(16, dtype=np.float32)}
+    tiers.lstore("params", tree)
+    obj = tiers.rflush("params")
+    assert obj.version == tiers.versions["params"]
+    back = tiers.pool.read_object("params", obj.version, tree,
+                                  expected_crc=obj.crc)
+    np.testing.assert_array_equal(back["w"], tree["w"])
+    sharded = tiers.rflush_sharded("params", 2)
+    assert len(sharded.shards) >= 1
+    assert tiers.emulator is emu
+    assert emu.total_ns() > 0
+    per_op = emu.per_op_ns()
+    assert per_op["lstore"] > 0 and per_op["rflush"] > 0
