@@ -29,9 +29,8 @@ except ImportError:                      # standalone: python benchmarks/...
 
 from repro.configs import get_smoke_config
 from repro.data.pipeline import DataPipeline, SyntheticLMSource
+from repro.dsm.api import open_cxl0
 from repro.dsm.pool import DSMPool
-from repro.dsm.recovery import RecoveryManager
-from repro.dsm.tiers import TierManager
 from repro.models.registry import build
 from repro.train.loop import run_durable_loop
 from repro.train.state import init_train_state
@@ -50,7 +49,8 @@ def run(mode: str, tmp: str, *, n_shards=1, replicate=False, crash=None):
     step = jax.jit(make_train_step(bundle))
     pipe = DataPipeline(SyntheticLMSource(cfg.vocab_size), 4, 64)
     pool = DSMPool(f"{tmp}/pool_{mode}_{n_shards}_{replicate}")
-    peer = TierManager(DSMPool(f"{tmp}/peer_{mode}_{n_shards}"), worker_id=1)
+    # a CXL0Context is itself a valid RStore peer (exposes .staging)
+    peer = open_cxl0(f"{tmp}/peer_{mode}_{n_shards}", 1)
     t0 = time.perf_counter()
     r = run_durable_loop(step, state, pipe, pool, n_steps=N_STEPS,
                          commit_every=COMMIT_EVERY, commit_mode=mode,

@@ -36,10 +36,9 @@ try:
 except ImportError:                      # standalone: python benchmarks/...
     from harness import Bench
 
+from repro.dsm.api import open_cxl0
 from repro.dsm.emu import PRESETS, TopologyEmulator, attach_emulator
 from repro.dsm.placement import PlacementPolicy
-from repro.dsm.pool import DSMPool
-from repro.dsm.tiers import TierManager
 
 N_OBJECTS = 24
 SIZE_RANGE = (4 << 10, 64 << 20)         # 4 KiB .. 64 MiB, log-uniform
@@ -77,8 +76,8 @@ def emulated_run(preset: str, sizes: List[int]) -> Dict[str, float]:
     emu = TopologyEmulator(preset, seed=SEED)
     tmp = tempfile.mkdtemp(prefix=f"bench_placement_{preset}_")
     try:
-        tiers = attach_emulator(TierManager(DSMPool(f"{tmp}/pool"), 0), emu)
-        peer = TierManager(DSMPool(f"{tmp}/peer"), 1)
+        tiers = attach_emulator(open_cxl0(f"{tmp}/pool", 0).tiers, emu)
+        peer = open_cxl0(f"{tmp}/peer", 1)
         for i, nb in enumerate(sizes):
             name = f"obj{i}"
             # payloads are capped at 4 KiB so the bench stays I/O-light:

@@ -1,9 +1,12 @@
-"""Quickstart: the CXL0 model in 3 acts.
+"""Quickstart: the CXL0 model in 4 acts.
 
   1. litmus tests — what can(not) happen under partial crashes;
   2. Proposition 1 — primitive simulations, checked exhaustively;
   3. FliT-for-CXL0 — the §6 transformation making a concurrent counter
-     durably linearizable, with the untransformed object as the foil.
+     durably linearizable, with the untransformed object as the foil;
+  4. the same transformation as a one-line API over the REAL runtime:
+     ``open_cxl0(...).transform(CounterSpec())`` — completed increments
+     survive a worker crash, recovered through the one recovery path.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -50,7 +53,35 @@ def act3_flit():
         print(f"  {policy:15s} violations={viol:3d}/100  -> {verdict}")
 
 
+def act4_context():
+    print("=" * 70)
+    print("Act 4 — ctx.transform: the §6 counter on the real runtime")
+    print("=" * 70)
+    import shutil
+    import tempfile
+    from repro.core.objects import CounterSpec
+    from repro.dsm import open_cxl0
+
+    tmp = tempfile.mkdtemp(prefix="quickstart_act4_")
+    try:
+        ctx = open_cxl0(f"{tmp}/pool", schedule="sync")
+        counter = ctx.transform(CounterSpec(), name="counter")
+        got = [counter.op("inc") for _ in range(5)]
+        print(f"  5 increments returned {got}; live value "
+              f"{counter.state}")
+        ctx.crash()         # the worker's volatile tiers vanish
+        revived = open_cxl0(f"{tmp}/pool").transform(CounterSpec(),
+                                                     name="counter")
+        print(f"  after crash + recovery ({revived.recovered_from[1]}): "
+              f"value {revived.state}, {revived.ops_done + 1} completed ops")
+        assert revived.state == 5
+        print("  every completed op survived — durably linearizable")
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
 if __name__ == "__main__":
     act1_litmus()
     act2_prop1()
     act3_flit()
+    act4_context()

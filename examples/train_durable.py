@@ -1,14 +1,18 @@
-"""End-to-end driver: train a language model with durable FliT-protocol
-checkpointing and injected worker crashes.
+"""End-to-end driver: train a language model durably with the unified
+CXL0 programming-model API — `open_cxl0` + commit regions, nothing else.
+
+The whole durable loop is the paper's model verbatim: every step LStores
+the new state into the context (`ctx.put`), every tenth step opens a
+*commit region* whose clean exit emits exactly one completeOp, and a
+mid-run crash (`ctx.crash()` — the worker's volatile tiers vanish) is
+healed by the ONE recovery path `ctx.recover`, which replays from the
+newest completed commit.  The final state is verified IDENTICAL to an
+uninterrupted run — durable linearizability, end to end.
 
 Defaults train a ~10M-param OLMo-style model for 60 steps on CPU in a few
-minutes; ``--full`` selects a ~100M-param config for a few hundred steps
-(the assignment's end-to-end scale — expect ~1-2 h on one CPU core; on a
-real TPU slice the same driver runs via launch/train.py).
-
-Two crashes are injected; the loop recovers from the pool (or a peer's
-staged copy with --replicate) and the final state is verified IDENTICAL to
-an uninterrupted run — the durable-linearizability guarantee, end to end.
+minutes; ``--full`` selects a ~100M-param config (expect ~1-2 h on one CPU
+core; on a real TPU slice the same loop runs via launch/train.py, which
+wires the identical ``CXL0Config``).
 
 Run:  PYTHONPATH=src python examples/train_durable.py [--full] [--replicate]
 """
@@ -17,14 +21,12 @@ import shutil
 import tempfile
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
 from repro.data.pipeline import DataPipeline, SyntheticLMSource
-from repro.dsm.pool import DSMPool
-from repro.dsm.tiers import TierManager
-from repro.models.registry import build
-from repro.train.loop import run_durable_loop
+from repro.dsm import open_cxl0
 from repro.train.state import init_train_state
 from repro.train.step import make_train_step
 
@@ -40,6 +42,70 @@ def small_cfg(full: bool):
                       remat="none")
 
 
+def state_objects(state, pipe_state):
+    """The committed object set: params + optimizer moments + counters +
+    data-pipeline position (so replay resumes exactly where the recovered
+    step left off — no data loss or dupes)."""
+    return {
+        "params": state.params,
+        "opt_mu": state.opt.mu,
+        "opt_nu": state.opt.nu,
+        "counters": {"opt_step": state.opt.step, "rng": state.rng},
+        "pipeline": {"seed": np.int64(pipe_state.seed),
+                     "step": np.int64(pipe_state.step)},
+    }
+
+
+def objects_to_state(objs, template, pipe):
+    from repro.data.pipeline import PipelineState
+    st = template.__class__(
+        params=objs["params"],
+        opt=template.opt._replace(
+            mu=objs["opt_mu"], nu=objs["opt_nu"],
+            step=jnp.asarray(objs["counters"]["opt_step"])),
+        rng=jnp.asarray(objs["counters"]["rng"]))
+    pipe.state = PipelineState(seed=int(objs["pipeline"]["seed"]),
+                               step=int(objs["pipeline"]["step"]))
+    return st
+
+
+def train(pool_path, step_fn, init_state, pipe, *, n_steps,
+          commit_every=10, crash_steps=(), peer=None):
+    """The 5-line durable loop (plus crash injection): open a context,
+    put + commit-region on a cadence, recover after any crash."""
+    ctx = open_cxl0(pool_path, schedule="async", peers=(peer,) if peer
+                    else (), replicate_to=peer)
+    templates = state_objects(init_state, pipe.state)
+    ctx.put(templates, step=-1)
+    with ctx.commit(-1):                       # durable floor: step -1
+        pass
+    ctx.drain()
+
+    state, losses, recoveries = init_state, [], []
+    crash_steps = set(crash_steps)
+    i = 0
+    while i < n_steps:
+        if i in crash_steps:
+            crash_steps.discard(i)
+            ctx.crash()                        # f_i: volatile tiers vanish
+            objs, rec_step, source = ctx.recover(templates)
+            state = objects_to_state(objs, state, pipe)
+            recoveries.append(source)
+            i = rec_step + 1
+            continue
+        batch = {k: jnp.asarray(v) for k, v in pipe.next_global().items()}
+        state, metrics = step_fn(state, batch)
+        losses.append(float(metrics["loss"]))
+        ctx.put(state_objects(state, pipe.state), step=i)
+        if (i + 1) % commit_every == 0:
+            with ctx.commit(i):                # ONE completeOp on exit
+                pass
+        i += 1
+    ctx.drain()                                # tail flush (planned GPF)
+    ctx.close()
+    return state, losses, recoveries
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
@@ -52,6 +118,7 @@ def main():
     n_steps = args.steps or (300 if args.full else 60)
     batch, seq = (8, 512) if args.full else (4, 256)
 
+    from repro.models.registry import build
     bundle = build(cfg)
     print(f"model: {bundle.n_params()/1e6:.1f}M params, "
           f"{cfg.n_layers}L d{cfg.d_model}")
@@ -61,35 +128,27 @@ def main():
                                    total_steps=n_steps))
     tmp = tempfile.mkdtemp(prefix="train_durable_")
     try:
-        pool = DSMPool(f"{tmp}/pool")
-        peer = TierManager(DSMPool(f"{tmp}/peer"), worker_id=1)
-        crash_at = {n_steps // 3: "before_commit",
-                    2 * n_steps // 3: "after_commit"}
+        # a peer context IS a valid RStore target / recovery source
+        peer = (open_cxl0(f"{tmp}/peer", 1) if args.replicate else None)
+        crashes = sorted({max(n_steps // 3, 1), max(2 * n_steps // 3, 2)})
         pipe = DataPipeline(SyntheticLMSource(cfg.vocab_size), batch, seq)
         print(f"training {n_steps} steps, commit every 10, crashes at "
-              f"{sorted(crash_at)} …")
-        r = run_durable_loop(step, state, pipe, pool, n_steps=n_steps,
-                             commit_every=10, commit_mode="async",
-                             peer_tiers=peer if args.replicate else None,
-                             replicate=args.replicate, crash_at=crash_at)
-        print(f"crashes: {r.crashes}  recoveries: {r.recoveries}")
-        print(f"loss: first={r.losses[0]:.3f} last={r.losses[-1]:.3f}")
-        mean_compute = np.mean([t.compute_s for t in r.timings
-                                if t.compute_s])
-        mean_commit = np.mean([t.commit_s for t in r.timings if t.commit_s])
-        print(f"step time: {mean_compute*1e3:.0f} ms;   "
-              f"commit (blocking part): {mean_commit*1e3:.0f} ms")
+              f"{crashes} …")
+        final, losses, recoveries = train(
+            f"{tmp}/pool", step, state, pipe, n_steps=n_steps,
+            crash_steps=crashes, peer=peer)
+        print(f"crashes: {len(recoveries)}  recoveries: {recoveries}")
+        print(f"loss: first={losses[0]:.3f} last={losses[-1]:.3f}")
 
-        # verify against an uninterrupted run
-        pool2 = DSMPool(f"{tmp}/pool2")
+        # verify against an uninterrupted run over a fresh pool
         pipe2 = DataPipeline(SyntheticLMSource(cfg.vocab_size), batch, seq)
-        r2 = run_durable_loop(step, state, pipe2, pool2, n_steps=n_steps,
-                              commit_every=10)
+        clean, _, _ = train(f"{tmp}/pool2", step, state, pipe2,
+                            n_steps=n_steps)
         same = all(
             np.array_equal(np.asarray(a, np.float32),
                            np.asarray(b, np.float32))
-            for a, b in zip(jax.tree_util.tree_leaves(r.state.params),
-                            jax.tree_util.tree_leaves(r2.state.params)))
+            for a, b in zip(jax.tree_util.tree_leaves(final.params),
+                            jax.tree_util.tree_leaves(clean.params)))
         print(f"crash-recovered final params identical to clean run: {same}")
         assert same
     finally:

@@ -19,8 +19,28 @@ namespaces (``w<i>/...``), the multi-writer-safe manifest protocol (rank
 records + ONE elected cluster completeOp per step), and the spill-file
 staging area that makes the RStore peer-recovery path work across
 processes.
+
+The public programming-model surface is ``repro.dsm.api``: ``open_cxl0``
+returns a ``CXL0Context`` that owns the whole stack behind one
+``CXL0Config`` — durable object handles, commit regions, the §6
+transformation and ONE recovery path.  The constructors below remain for
+primitive-level access; every subsystem now wires itself through the
+context.
 """
 from repro.dsm.pool import DSMPool, PoolObject  # noqa: F401
 from repro.dsm.tiers import TierManager  # noqa: F401
 from repro.dsm.flit_runtime import DurableCommitter  # noqa: F401
-from repro.dsm.recovery import RecoveryManager, CrashError  # noqa: F401
+from repro.dsm.recovery import (ColdStartError, CrashError,  # noqa: F401
+                                RecoveryManager)
+from repro.dsm.api import (CXL0Config, CXL0Context,  # noqa: F401
+                           CommitRegion, DurableHandle, TransformedObject,
+                           open_cxl0)
+
+__all__ = [
+    # the unified programming-model API (use this)
+    "open_cxl0", "CXL0Context", "CXL0Config", "CommitRegion",
+    "DurableHandle", "TransformedObject",
+    # primitive-level building blocks (the context owns these for you)
+    "DSMPool", "PoolObject", "TierManager", "DurableCommitter",
+    "RecoveryManager", "CrashError", "ColdStartError",
+]

@@ -1,0 +1,451 @@
+"""CXL0Context — the unified programming-model API over the DSM runtime.
+
+The paper's contribution is a *programming model*: a small vocabulary of
+primitives (LStore / RStore / RFlush / MStore / completeOp) plus the §6
+transformation that makes any linearizable object durably linearizable.
+Before this module, using that model meant hand-wiring five classes
+(``DSMPool`` → ``TierManager`` → ``DurableCommitter`` → ``RecoveryManager``
++ optional ``PlacementPolicy``) and re-implementing tier construction,
+committer kwargs and the staging-beats-pool recovery precedence at every
+call site.  ``open_cxl0`` collapses that to one call:
+
+    from repro.dsm import open_cxl0
+
+    ctx = open_cxl0("/tmp/pool", worker_id=0, topology="cxl20-switched-pool")
+    with ctx.commit(step, meta={"tag": "demo"}) as txn:
+        txn.store("params", params)          # LStore (+ RStore replication)
+    objs, step, source = ctx.recover(templates)   # staging-beats-pool, always
+
+Three abstractions ride on the context:
+
+* **durable object handles** — ``h = ctx.durable(name, init=tree)`` with
+  the primitive vocabulary verbatim: ``h.lstore(tree)``, ``h.rstore(peer)``,
+  ``h.rflush()``, ``h.mstore(tree)``.  A handle is sugar over the context's
+  tier stack; completeOp stays with commit regions and ``ctx.transform``.
+
+* **commit regions** — ``with ctx.commit(step, meta=...) as txn:`` stores
+  route through the configured placement policy, async/sharded flushes are
+  joined, and exactly one completeOp (atomic manifest rename) is emitted on
+  clean exit.  An exception anywhere inside the region emits NO completeOp:
+  recovery lands on the previous commit — the crash-anywhere contract.
+  (Under the ``async`` / ``sharded-async`` schedules the completeOp emitted
+  at exit publishes the PREVIOUS region, whose flushes overlapped compute —
+  the double-buffered protocol of ``repro.dsm.flit_runtime``.)
+
+* **§6 transformation** — ``ctx.transform(spec)`` wraps ANY linearizable
+  object given as a sequential spec (the ``repro.core.objects.SeqSpec``
+  interface: ``initial()`` + ``apply(state, op, args) -> (state', result)``)
+  with the paper's FliT-for-CXL0 discipline at op granularity: every
+  operation LStores the post-state, RFlushes it durably and completeOps.
+  A crash loses at most the in-flight op; recovery reuses the SAME
+  ``ctx.recover`` path as every other subsystem.
+
+``CXL0Config`` is the one dataclass all knobs live in; every legacy
+constructor (``run_durable_loop``, ``SessionStore``, ``build_serve_engine``,
+the cluster worker, the ``launch/*`` front-ends) now routes through it, so
+there is exactly one wiring path and one recovery path in the repo.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.dsm.flit_runtime import (AUTO_MODE, COMMIT_MODES, CommitStats,
+                                    DurableCommitter)
+from repro.dsm.pool import DSMPool, PoolObject
+from repro.dsm.recovery import ColdStartError, RecoveryManager
+from repro.dsm.tiers import TierManager
+
+#: the production default flush schedule when ``schedule="auto"`` and no
+#: topology/placement is configured (matches the training launcher default)
+DEFAULT_SCHEDULE = "sharded-async"
+
+#: ``schedule=`` accepts any of these; "auto" resolves at open time (to the
+#: placement policy's choice when a topology is configured, else the
+#: production default)
+SCHEDULES = COMMIT_MODES + (AUTO_MODE,)
+
+
+@dataclasses.dataclass
+class CXL0Config:
+    """Every wiring knob of the tier stack in one (round-trippable) place.
+
+    ``path``/``worker_id`` locate the pool and name the worker;
+    ``topology`` builds a cost-driven ``PlacementPolicy`` (or pass one
+    directly via ``placement``); ``schedule`` is a commit mode or "auto";
+    ``peers`` are recovery sources (anything with a ``.staging`` mapping —
+    a TierManager, a ``CXL0Context``, a cluster staging view);
+    ``replicate_to`` is the RStore replication target; ``fault_hook`` and
+    ``complete_fn`` are the scenario/cluster extension points (callables —
+    excluded from ``to_dict`` round-trips)."""
+
+    path: Optional[str] = None
+    worker_id: int = 0
+    topology: Optional[str] = None
+    schedule: str = AUTO_MODE
+    n_shards: Optional[int] = None
+    retention: Optional[int] = None
+    peers: Tuple[Any, ...] = ()
+    replicate_to: Optional[Any] = None
+    placement: Optional[Any] = None           # PlacementPolicy override
+    fault_hook: Optional[Callable[[str, int], None]] = None
+    complete_fn: Optional[Callable] = None
+
+    #: the serializable subset (callables / live objects excluded)
+    SERIALIZED = ("path", "worker_id", "topology", "schedule", "n_shards",
+                  "retention")
+
+    def __post_init__(self):
+        if self.schedule not in SCHEDULES:
+            raise ValueError(f"schedule={self.schedule!r} not in "
+                             f"{SCHEDULES}")
+
+    # -- resolution ---------------------------------------------------------
+    def resolved_placement(self):
+        """The PlacementPolicy this stack runs under: an explicit policy
+        wins; else one is built from ``topology``; else None."""
+        if self.placement is not None:
+            return self.placement
+        if self.topology is not None:
+            from repro.dsm.placement import PlacementPolicy
+            return PlacementPolicy(self.topology)
+        return None
+
+    def resolved_schedule(self, placement=None) -> str:
+        """"auto" defers to the placement policy when one is configured
+        (the committer prices the flush at first commit) and otherwise
+        picks the production default; explicit modes pass through."""
+        if self.schedule != AUTO_MODE:
+            return self.schedule
+        if placement is not None or self.placement is not None \
+                or self.topology is not None:
+            return AUTO_MODE
+        return DEFAULT_SCHEDULE
+
+    # -- round trip ---------------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        return {k: getattr(self, k) for k in self.SERIALIZED}
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "CXL0Config":
+        return cls(**{k: d[k] for k in cls.SERIALIZED if k in d})
+
+    def open(self, pool: Optional[DSMPool] = None) -> "CXL0Context":
+        """Build the live context (the one wiring path)."""
+        return CXL0Context(self, pool=pool)
+
+
+class CommitRegion:
+    """``with ctx.commit(step, meta=...) as txn:`` — the Alg. 2 commit
+    window as a scope.  ``txn.store`` LStores (and RStore-replicates when
+    the context has a replication target); on clean exit the committer
+    flushes every HBM object under the configured schedule/placement and
+    emits one completeOp.  On an exception NO completeOp happens — the
+    step simply is not durable and recovery lands on the previous commit."""
+
+    def __init__(self, ctx: "CXL0Context", step: int,
+                 meta: Optional[dict] = None):
+        self._ctx = ctx
+        self.step = step
+        self.meta = meta
+        #: pre-region HBM value per name stored THROUGH this region —
+        #: restored on an aborted exit, so a caller that survives the
+        #: exception in-process cannot have the torn batch published by a
+        #: LATER commit (version counters only ever rise, so the undo can
+        #: never collide with files a manifest references)
+        self._undo: Dict[str, Tuple[bool, Any]] = {}
+        #: CommitStats of the completeOp emitted at exit (async schedules:
+        #: the PREVIOUS region's, None on the very first commit)
+        self.stats: Optional[CommitStats] = None
+
+    def store(self, name: str, tree: Any):
+        """LStore one object for this commit (+ RStore replication when the
+        context has a replication target) — the committer's own update
+        path, so region stores and ``ctx.put`` stores never diverge."""
+        if name not in self._undo:
+            hbm = self._ctx.tiers.hbm
+            self._undo[name] = (name in hbm, hbm.get(name))
+        self._ctx.committer.update({name: tree}, step=self.step)
+
+    def store_all(self, objects: Dict[str, Any]):
+        for name, tree in objects.items():
+            self.store(name, tree)
+
+    def __enter__(self) -> "CommitRegion":
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        if exc_type is not None:
+            # crash inside the region: no completeOp, and the region's own
+            # stores leave the volatile tier again — a torn batch must be
+            # invisible even to a process that catches the exception and
+            # keeps committing
+            hbm = self._ctx.tiers.hbm
+            for name, (had, prev) in self._undo.items():
+                if had:
+                    hbm[name] = prev
+                else:
+                    hbm.pop(name, None)
+            return False
+        self.stats = self._ctx.committer.commit(self.step, meta=self.meta)
+        return False
+
+
+@dataclasses.dataclass
+class DurableHandle:
+    """A named durable object: the paper's primitive vocabulary, verbatim,
+    over the context's tier stack.  completeOp is not a handle method —
+    it belongs to commit regions (``ctx.commit``) and the §6 transform,
+    which is exactly the paper's split between stores/flushes (per
+    location) and operation completion (per high-level op)."""
+
+    ctx: "CXL0Context"
+    name: str
+
+    def lstore(self, tree: Any) -> "DurableHandle":
+        """Update the volatile HBM tier (completes immediately)."""
+        self.ctx.tiers.lstore(self.name, tree)
+        return self
+
+    def rstore(self, peer: Any = None, tag: Optional[int] = None):
+        """Stage the current value into a peer's host buffer (survives OUR
+        crash).  ``peer`` defaults to the context's replication target."""
+        peer = peer if peer is not None else self.ctx.committer.replicate_to
+        if peer is None:
+            raise ValueError(f"rstore({self.name!r}): no peer given and the "
+                             f"context has no replicate_to target")
+        self.ctx.tiers.rstore(self.name, peer, tag=tag)
+
+    def rflush(self) -> PoolObject:
+        """Durable write into the pool; returns once on storage."""
+        return self.ctx.tiers.rflush(self.name)
+
+    def mstore(self, tree: Any) -> PoolObject:
+        """lstore + rflush fused (Prop. 1.8)."""
+        return self.ctx.tiers.mstore(self.name, tree)
+
+    @property
+    def value(self) -> Any:
+        return self.ctx.tiers.hbm.get(self.name)
+
+    @property
+    def version(self) -> int:
+        return self.ctx.tiers.versions.get(self.name, 0)
+
+
+# -- §6 transformation at object granularity --------------------------------
+
+def _encode_state(state) -> Dict[str, np.ndarray]:
+    """Spec states (ints / nested tuples) as a pool-storable pytree."""
+    raw = json.dumps(state).encode()
+    return {"state": np.frombuffer(raw, np.uint8).copy()}
+
+
+def _decode_state(tree) -> Any:
+    def tup(x):
+        return tuple(tup(i) for i in x) if isinstance(x, list) else x
+    return tup(json.loads(np.asarray(tree["state"]).tobytes().decode()))
+
+
+_STATE_TEMPLATE = {"state": np.zeros(0, np.uint8)}
+
+
+class TransformedObject:
+    """The paper's §6 FliT-for-CXL0 transformation applied to any
+    linearizable object, as a reusable API (previously only the checkpoint
+    path embodied it).  The object is given as a sequential spec
+    (``initial()`` + ``apply(state, op, args) -> (state', result)`` — the
+    ``repro.core.objects.SeqSpec`` interface); every ``op()`` runs Alg. 2:
+
+        flit_counter++ ; LStore(state') ; RFlush(state') ; flit_counter-- ;
+        completeOp  (atomic manifest rename)
+
+    so an op that returned to its caller survives any crash, and a crash
+    mid-op is invisible — recovery (the shared ``ctx.recover`` path) lands
+    on the newest COMPLETED op.  The op index is the commit step, so the
+    recovered ``ops_done`` tells the caller exactly how many ops are in
+    the durable history."""
+
+    def __init__(self, ctx: "CXL0Context", spec: Any, name: str = "object",
+                 recover: bool = True):
+        self.ctx = ctx
+        self.spec = spec
+        self.name = name
+        self.state = spec.initial()
+        self.ops_done = -1                    # step of the newest completeOp
+        self.recovered_from: Optional[Tuple[int, str]] = None
+        if recover:
+            got = ctx.try_recover({name: _STATE_TEMPLATE}, exact=False)
+            if got is not None:
+                objs, step, source = got
+                self.state = _decode_state(objs[name])
+                self.ops_done = step
+                self.recovered_from = (step, source)
+
+    def op(self, op: str, *args) -> Any:
+        """Apply one operation durably (Alg. 2 at op granularity)."""
+        new_state, result = self.spec.apply(self.state, op, args)
+        step = self.ops_done + 1
+        self.ctx.tiers.lstore(self.name, _encode_state(new_state))  # LStore
+        obj = self.ctx.tiers.rflush(self.name)                      # RFlush
+        self.ctx.pool.commit_manifest(                              # completeOp
+            step, {self.name: obj},
+            meta={"kind": "flit-object", "object": self.name})
+        self.state = new_state
+        self.ops_done = step
+        return result
+
+
+class CXL0Context:
+    """The façade: owns pool / tiers / committer / recovery / placement
+    behind one ``CXL0Config``.  Exposes the legacy objects as attributes
+    (``.pool``, ``.tiers``, ``.committer``, ``.recovery``, ``.placement``)
+    for code that needs primitive access, and the programming-model surface
+    (``durable`` / ``commit`` / ``transform`` / ``recover``) for everything
+    else.  A context is itself a valid RStore peer / recovery source (it
+    exposes ``.staging``), so ``open_cxl0(peer_path, worker_id=1)`` IS the
+    peer object the committer replicates into."""
+
+    def __init__(self, config: CXL0Config, *, pool: Optional[DSMPool] = None):
+        if pool is None and config.path is None:
+            raise ValueError("CXL0Config needs a pool path (or pass an "
+                             "already-open DSMPool)")
+        self.config = config
+        self.pool = pool if pool is not None else DSMPool(config.path)
+        self.placement = config.resolved_placement()
+        self.tiers = TierManager(self.pool, config.worker_id)
+        self.peers: Tuple[Any, ...] = tuple(config.peers)
+        self.committer = DurableCommitter(
+            self.tiers,
+            mode=config.resolved_schedule(self.placement),
+            replicate_to=config.replicate_to,
+            n_shards=config.n_shards,
+            retention=config.retention,
+            fault_hook=config.fault_hook,
+            placement=self.placement,
+            complete_fn=config.complete_fn)
+        self.recovery = RecoveryManager(self.pool)
+
+    # -- peer interop --------------------------------------------------------
+    @property
+    def staging(self) -> Dict[str, Tuple[int, Any]]:
+        """Peer-staged copies held BY this worker — makes a context usable
+        anywhere a ``.staging``-bearing peer is expected (rstore targets,
+        recovery sources)."""
+        return self.tiers.staging
+
+    @property
+    def worker_id(self) -> int:
+        return self.config.worker_id
+
+    # -- the programming-model surface --------------------------------------
+    def durable(self, name: str, init: Any = None) -> DurableHandle:
+        """A named durable-object handle; ``init`` LStores an initial value
+        if the object is not already in the HBM tier."""
+        if init is not None and name not in self.tiers.hbm:
+            self.tiers.lstore(name, init)
+        return DurableHandle(self, name)
+
+    def transform(self, spec: Any, name: str = "object",
+                  recover: bool = True) -> TransformedObject:
+        """Apply the §6 transformation to a linearizable object (see
+        ``TransformedObject``)."""
+        return TransformedObject(self, spec, name=name, recover=recover)
+
+    def put(self, objects: Dict[str, Any], step: Optional[int] = None):
+        """Per-step LStore of new state (+ RStore replication when
+        configured) WITHOUT committing — the hot-path half of the loop;
+        a later ``commit`` region makes it durable."""
+        self.committer.update(objects, step=step)
+
+    def commit(self, step: int, meta: Optional[dict] = None) -> CommitRegion:
+        """Open a commit region for ``step`` (see ``CommitRegion``).
+        Objects already ``put`` are included; extra stores go through
+        ``txn.store``.  Exactly one completeOp on clean exit."""
+        return CommitRegion(self, step, meta)
+
+    def drain(self, meta: Optional[dict] = None) -> Optional[CommitStats]:
+        """Join + completeOp any pending async commit (planned shutdown —
+        the paper's sanctioned GPF use case)."""
+        return self.committer.drain(meta)
+
+    def recover(self, templates: Dict[str, Any],
+                peers: Optional[Sequence[Any]] = None, *,
+                exact: bool = True) -> Tuple[Dict[str, Any], int, str]:
+        """THE recovery path: a surviving peer's RStore-staged copy beats
+        the pool when newer; else the newest fully-CRC-valid manifest.
+        ``peers`` defaults to the context's configured peers; raises
+        ``ColdStartError`` when nothing is recoverable."""
+        use = tuple(peers) if peers is not None else self.peers
+        return self.recovery.recover(templates, use, exact=exact)
+
+    def try_recover(self, templates: Dict[str, Any],
+                    peers: Optional[Sequence[Any]] = None, *,
+                    exact: bool = True
+                    ) -> Optional[Tuple[Dict[str, Any], int, str]]:
+        """``recover`` that returns None on a cold pool instead of raising
+        (any OTHER failure still propagates — a real runtime error during
+        recovery must never be mistaken for a cold start)."""
+        try:
+            return self.recover(templates, peers, exact=exact)
+        except ColdStartError:
+            return None
+
+    # -- lifecycle -----------------------------------------------------------
+    def abort_pending(self):
+        """Crash path: discard the pending commit WITHOUT completing it
+        (outstanding writes are joined so no stale write can land later)."""
+        self.committer.abort_pending()
+
+    def crash(self):
+        """f_i: this worker's volatile tiers vanish (pending commits are
+        aborted first).  The pool and peers are uninterrupted."""
+        self.committer.abort_pending()
+        self.tiers.crash()
+
+    def close(self):
+        """Release flush resources (idempotent).  Does NOT drain: call
+        ``drain()`` first if a pending async commit should become durable."""
+        self.tiers.close()
+
+    def __enter__(self) -> "CXL0Context":
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        self.close()
+        return False
+
+
+def open_cxl0(path, worker_id: int = 0, *,
+              topology: Optional[str] = None,
+              placement: Optional[Any] = None,
+              schedule: str = AUTO_MODE,
+              n_shards: Optional[int] = None,
+              retention: Optional[int] = None,
+              peers: Sequence[Any] = (),
+              replicate_to: Optional[Any] = None,
+              fault_hook: Optional[Callable[[str, int], None]] = None,
+              complete_fn: Optional[Callable] = None) -> CXL0Context:
+    """Open a CXL0 programming-model context over a pool.
+
+    ``path`` is the pool directory (or an already-open ``DSMPool``).  All
+    other knobs land in one ``CXL0Config`` — see its docstring.  Typical
+    whole programs are now ~5 lines:
+
+        ctx = open_cxl0("/tmp/pool")
+        ctx.put(state_objects, step=0)
+        with ctx.commit(0):
+            pass
+        objs, step, source = ctx.recover(templates)
+    """
+    pool = path if isinstance(path, DSMPool) else None
+    cfg = CXL0Config(
+        path=path if pool is None else path.path,
+        worker_id=worker_id, topology=topology, placement=placement,
+        schedule=schedule, n_shards=n_shards, retention=retention,
+        peers=tuple(peers), replicate_to=replicate_to,
+        fault_hook=fault_hook, complete_fn=complete_fn)
+    return cfg.open(pool=pool)

@@ -37,8 +37,15 @@ from repro.dsm.pool import (DSMPool, PoolObject, ShardedObject,
 
 
 def _to_host(tree):
-    """Device→host copy (the actual D2H of the staging tier)."""
-    return jax.tree_util.tree_map(lambda a: np.asarray(a), tree)
+    """Device→host copy (the actual D2H of the staging tier).  A tree whose
+    every leaf is already a host ``np.ndarray`` is returned as-is — the
+    cluster spill path round-trips host arrays through here every step, and
+    rebuilding an identical tree per call is pure overhead."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    if all(type(l) is np.ndarray for l in leaves):
+        return tree
+    return jax.tree_util.tree_unflatten(treedef,
+                                        [np.asarray(l) for l in leaves])
 
 
 class TierManager:

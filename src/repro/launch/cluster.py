@@ -49,6 +49,10 @@ def main(argv=None) -> int:
     ap.add_argument("--retention", type=int, default=5,
                     help="cluster manifests kept by the elected "
                          "committer's post-commit gc (0 = unbounded)")
+    ap.add_argument("--topology", default=None,
+                    help="emulated CXL topology preset forwarded to every "
+                         "rank (cost-driven staging + shard sizing — see "
+                         "repro.dsm.emu.PRESETS)")
     ap.add_argument("--shrink-at", type=int, default=0,
                     help="planned elastic scale-down: --victim leaves at "
                          "this step (0 = no shrink)")
@@ -75,6 +79,7 @@ def main(argv=None) -> int:
                              dim=args.dim, tensors=args.tensors,
                              global_batch=args.global_batch,
                              retention=args.retention,
+                             topology=args.topology,
                              timeout=args.timeout)
              for r in range(args.workers)}
     print(f"launched {args.workers} workers over {args.pool}")

@@ -22,6 +22,7 @@ import time
 
 import jax
 
+from repro.dsm.api import CXL0Config
 from repro.dsm.emu import PRESETS
 from repro.dsm.flit_runtime import AUTO_MODE, COMMIT_MODES
 from repro.parallel.sharding import ctx_for_mesh
@@ -77,12 +78,17 @@ def main():
     trace = synthetic_trace(args.requests, seed=args.seed,
                             prompt_lens=(args.prompt_len,),
                             new_tokens=new_tokens, vocab_size=1)
+    # one wiring path: the pool/schedule/topology knobs land in the
+    # unified config; stateless serving passes no config at all
+    dsm = (CXL0Config(path=args.pool, schedule=args.commit_mode,
+                      topology=args.topology, retention=2)
+           if args.pool else None)
     engine, cfg = build_serve_engine(
         args.arch, smoke=args.smoke, n_slots=args.slots,
-        t_max=trace_t_max(trace), ctx=ctx, pool_path=args.pool,
-        commit_every=args.commit_every, commit_mode=args.commit_mode,
+        t_max=trace_t_max(trace), ctx=ctx, dsm=dsm,
+        commit_every=args.commit_every if args.pool else 0,
         restore_mode=args.restore_mode, retire_done=args.retire_done,
-        seed=args.seed, topology=args.topology)
+        seed=args.seed)
     # regenerate with the real vocab now the config is known
     trace = synthetic_trace(args.requests, seed=args.seed,
                             prompt_lens=(args.prompt_len,),

@@ -27,7 +27,8 @@ import numpy as np
 
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.data.pipeline import DataPipeline, SyntheticLMSource
-from repro.dsm.pool import DSMPool
+from repro.dsm.api import CXL0Config
+from repro.dsm.emu import PRESETS
 from repro.models.registry import build
 from repro.parallel.sharding import ctx_for_mesh
 from repro.parallel.compression import make_int8_transform
@@ -48,7 +49,13 @@ def main():
     ap.add_argument("--pool", default="/tmp/repro_pool")
     ap.add_argument("--commit-every", type=int, default=10)
     ap.add_argument("--mode", default="sharded-async",
-                    choices=["sync", "async", "sharded", "sharded-async"])
+                    choices=["sync", "async", "sharded", "sharded-async",
+                             "auto"],
+                    help="flush schedule; 'auto' defers to the placement "
+                         "policy (requires --topology)")
+    ap.add_argument("--topology", default=None, choices=sorted(PRESETS),
+                    help="emulated CXL topology: cost-driven commit shard "
+                         "count (and schedule, with --mode auto)")
     ap.add_argument("--shards", type=int, default=0,
                     help="shard pipelines per object (0 = auto: one per "
                          "local device, capped by state size)")
@@ -96,17 +103,21 @@ def main():
                                    grad_transform=grad_transform))
     pipe = DataPipeline(SyntheticLMSource(cfg.vocab_size),
                         args.global_batch, args.seq)
-    pool = DSMPool(args.pool)
+    if args.mode == "auto" and args.topology is None:
+        ap.error("--mode auto requires --topology")
+    # one wiring path: every DSM knob lands in the unified config.
     # --shards 0 -> None: the committer auto-sizes from the actual HBM
     # state volume at the first sharded flush (one heuristic, one place)
-    n_shards = args.shards or None
-    r = run_durable_loop(step, state, pipe, pool, n_steps=args.steps,
+    ctx = CXL0Config(path=args.pool,
+                     worker_id=jax.process_index(),
+                     schedule=args.mode,
+                     topology=args.topology,
+                     n_shards=args.shards or None,
+                     retention=args.retention or None).open()
+    pool = ctx.pool
+    r = run_durable_loop(step, state, pipe, ctx, n_steps=args.steps,
                          commit_every=args.commit_every,
-                         commit_mode=args.mode,
-                         n_shards=n_shards,
-                         retention=args.retention or None,
-                         resume=args.resume,
-                         worker_id=jax.process_index())
+                         resume=args.resume)
     if r.resumed_from is not None:
         print(f"resumed from step {r.resumed_from} "
               f"(source: {r.recoveries[0]})")

@@ -46,7 +46,7 @@ def spawn_worker(pool: str, rank: int, world: int, *, steps: int,
                  commit_every: int, replicate: bool,
                  kill_point: str = "none", kill_step: int = 0,
                  dim: int = 16, tensors: int = 6, global_batch: int = 6,
-                 retention: int = 0,
+                 retention: int = 0, topology: str = None,
                  timeout: float = 120.0) -> subprocess.Popen:
     """THE cluster_worker command builder — shared by the scenario suite,
     the N-worker launcher and the cluster benchmark so a new worker flag
@@ -60,6 +60,8 @@ def spawn_worker(pool: str, rank: int, world: int, *, steps: int,
            "--retention", str(retention),
            "--timeout", str(timeout),
            "--kill-point", kill_point, "--kill-step", str(kill_step)]
+    if topology:
+        cmd += ["--topology", topology]
     return subprocess.Popen(cmd, env=_worker_env(),
                             stdout=subprocess.PIPE,
                             stderr=subprocess.PIPE, text=True)

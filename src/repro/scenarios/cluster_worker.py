@@ -59,13 +59,12 @@ import numpy as np
 import jax
 
 from repro.data.pipeline import SyntheticLMSource, shard_plan
+from repro.dsm.api import open_cxl0
 from repro.dsm.cluster import (ClusterProtocol, ControlPlane,
                                FileStagingArea, MembershipChange,
                                ScalarReduceBoard, rank_ns, ring_sibling)
-from repro.dsm.flit_runtime import DurableCommitter, KILL_POINTS
+from repro.dsm.flit_runtime import KILL_POINTS
 from repro.dsm.pool import DSMPool, manifest_entry
-from repro.dsm.recovery import RecoveryManager
-from repro.dsm.tiers import TierManager
 from repro.models.params import ParamDesc
 from repro.scenarios.worker import KILL_EXIT
 from repro.train.elastic import partition_plan, remesh
@@ -113,7 +112,6 @@ class ClusterWorker:
         self.tensors = {t: init_tensor(t, args.dim, args.seed)
                         for t in self.names if self.partition[t] == self.rank}
         self.source = SyntheticLMSource(1024)
-        self.tiers = TierManager(self.pool, self.rank)
         self.proto = ClusterProtocol(self.pool, self.rank, self.live,
                                      confirm=fault_hook is not None,
                                      retention=args.retention or None,
@@ -122,23 +120,29 @@ class ClusterWorker:
         # ring RStore-staging this rank's partition is worth its per-step
         # cost under the emulated topology, and sizes the shard pipelines
         # from the partition bytes instead of the fixed --shards
-        self.placement = None
+        placement = None
         self._stage_to_sibling = bool(args.replicate)
         n_shards = args.shards
         if getattr(args, "topology", None):
             from repro.dsm.emu import tree_nbytes
             from repro.dsm.placement import (PlacementPolicy,
                                              plan_rank_staging)
-            self.placement = PlacementPolicy(args.topology)
+            placement = PlacementPolicy(args.topology)
             part_bytes = tree_nbytes(self.state_objects())
             self._stage_to_sibling = (args.replicate and plan_rank_staging(
-                self.placement, part_bytes))
+                placement, part_bytes))
             n_shards = None             # resolved by the policy per bytes
-        self.committer = DurableCommitter(
-            self.tiers, mode="sharded", n_shards=n_shards,
-            fault_hook=fault_hook, placement=self.placement,
+        # one wiring path: the context owns tiers + committer; the cluster
+        # protocol plugs in as the delegated completeOp (rank record + ONE
+        # elected cluster manifest) and the ring sibling as the RStore peer
+        self.ctx = open_cxl0(
+            self.pool, self.rank, schedule="sharded", n_shards=n_shards,
+            placement=placement, fault_hook=fault_hook,
             complete_fn=self.proto.cluster_complete,
             replicate_to=self._proxy())
+        self.tiers = self.ctx.tiers
+        self.placement = self.ctx.placement
+        self.committer = self.ctx.committer
         self.step_done = -1          # last step whose update is applied
         self.resumed_from: Optional[int] = None
         self.source_used: Optional[str] = None
@@ -254,7 +258,7 @@ class ClusterWorker:
                                          self.args.dim)
         if self.rank == adopter:
             view = self.staging.view(self.rank, victim_tpl)
-            vobjs, q, source = RecoveryManager(self.pool).recover(
+            vobjs, q, source = self.ctx.recover(
                 victim_tpl, peers=(view,), exact=False)
             self.control.post_shrink_result(
                 gen_new, {"q": q, "source": source, "victim": victim,
@@ -319,8 +323,9 @@ class ClusterWorker:
         # initial durable floor (step -1): even a kill inside the FIRST
         # commit window leaves a recoverable cluster manifest.  Doubles as
         # the start barrier — every rank waits for it.
-        self.committer.update(self.state_objects(), step=-1)
-        self.committer.commit(-1, meta=self._meta())
+        self.ctx.put(self.state_objects(), step=-1)
+        with self.ctx.commit(-1, meta=self._meta()):
+            pass
         self.proto.wait_manifest(-1, control=self.control)
 
         k = 0
@@ -341,9 +346,10 @@ class ClusterWorker:
                 continue
             self._apply(np.float32(total / self.args.global_batch / 1000.0))
             self.step_done = k
-            self.committer.update(self.state_objects(), step=k)
+            self.ctx.put(self.state_objects(), step=k)
             if (k + 1) % self.args.commit_every == 0:
-                self.committer.commit(k, meta=self._meta())
+                with self.ctx.commit(k, meta=self._meta()):
+                    pass
             k += 1
 
         # final GPF commit: make the last step durable whatever the cadence

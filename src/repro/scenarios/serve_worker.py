@@ -70,6 +70,7 @@ def main(argv=None) -> int:
                 os._exit(KILL_EXIT)
 
     # imports after arg parsing: a bad flag should not pay jax startup
+    from repro.dsm.api import CXL0Config
     from repro.serve.engine import build_serve_engine
     from repro.serve.trace import synthetic_trace, trace_t_max
 
@@ -81,9 +82,11 @@ def main(argv=None) -> int:
                             new_tokens=new_tokens, vocab_size=1)
     engine, cfg = build_serve_engine(
         args.arch, smoke=True, n_slots=args.slots,
-        t_max=trace_t_max(trace), pool_path=args.pool,
-        commit_every=args.commit_every, commit_mode=args.commit_mode,
-        restore_mode=args.restore_mode, fault_hook=hook, seed=args.seed)
+        t_max=trace_t_max(trace),
+        dsm=CXL0Config(path=args.pool, schedule=args.commit_mode,
+                       retention=2, fault_hook=hook),
+        commit_every=args.commit_every,
+        restore_mode=args.restore_mode, seed=args.seed)
     trace = synthetic_trace(args.requests, seed=args.seed,
                             prompt_lens=(args.prompt_len,),
                             new_tokens=new_tokens,

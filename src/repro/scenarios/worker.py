@@ -31,8 +31,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.data.pipeline import DataPipeline, SyntheticLMSource
+from repro.dsm.api import CXL0Config
 from repro.dsm.flit_runtime import COMMIT_MODES, KILL_POINTS
-from repro.dsm.pool import DSMPool
 from repro.train.loop import run_durable_loop
 from repro.train.state import TrainState, init_train_state
 
@@ -129,13 +129,15 @@ def main(argv=None) -> int:
     else:
         step_fn, state, vocab = make_toy_step(), make_toy_state(args.dim), 1024
     pipe = DataPipeline(SyntheticLMSource(vocab), 4, 32)
-    pool = DSMPool(args.pool)
+    # one wiring path: every CLI knob lands in the unified config and the
+    # loop runs over the context it opens
+    ctx = CXL0Config(path=args.pool, schedule=args.mode,
+                     n_shards=args.shards,
+                     retention=args.retention or None,
+                     fault_hook=hook).open()
 
-    r = run_durable_loop(step_fn, state, pipe, pool, n_steps=args.steps,
-                         commit_every=args.commit_every,
-                         commit_mode=args.mode, n_shards=args.shards,
-                         retention=args.retention or None,
-                         fault_hook=hook, resume=True)
+    r = run_durable_loop(step_fn, state, pipe, ctx, n_steps=args.steps,
+                         commit_every=args.commit_every, resume=True)
 
     result = {
         "ok": True,
@@ -143,7 +145,7 @@ def main(argv=None) -> int:
         "resumed_from": r.resumed_from,
         "recoveries": r.recoveries,
         "digest": state_digest(r.state),
-        "final_manifest_step": pool.latest_manifest()["step"],
+        "final_manifest_step": ctx.pool.latest_manifest()["step"],
         "pipeline_step": r.pipeline_state.step,
     }
     line = json.dumps(result)

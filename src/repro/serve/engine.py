@@ -305,16 +305,23 @@ def build_serve_engine(arch: str = "olmo-1b", *, smoke: bool = True,
                        n_shards: Optional[int] = None, retention: int = 2,
                        fault_hook=None, restore_mode: str = "cache",
                        retire_done: bool = False, seed: int = 0,
-                       topology: Optional[str] = None):
+                       topology: Optional[str] = None,
+                       dsm: Optional["CXL0Config"] = None):
     """One-stop construction shared by the launcher, the example and the
     killable scenario worker: config -> bundle -> (sharded) params ->
     optional durable session store -> engine.  Returns (engine, cfg).
+
+    The durable tier stack is wired from ONE ``CXL0Config``: pass it
+    directly via ``dsm`` (the launchers do) or let the legacy kwargs
+    (``pool_path``/``commit_mode``/``n_shards``/``retention``/``topology``)
+    be folded into one here.  ``ctx`` is the parallelism context (mesh),
+    not the DSM context.
 
     Params are initialized from ``seed`` deterministically, so two
     processes built with the same arguments hold bit-identical weights —
     the property crash-replay bit-identity rests on."""
     from repro.configs import get_config, get_smoke_config
-    from repro.dsm.pool import DSMPool
+    from repro.dsm.api import CXL0Config
     from repro.models.registry import build as build_model
 
     cfg = get_smoke_config(arch) if smoke else get_config(arch)
@@ -326,16 +333,15 @@ def build_serve_engine(arch: str = "olmo-1b", *, smoke: bool = True,
         params = jax.tree_util.tree_map(
             jax.device_put, params, shardings_for(ctx, bundle.descs))
     store = None
-    if pool_path is not None:
-        placement = None
-        if topology is not None:
-            # cost-driven shard count (and, with commit_mode="auto", the
-            # schedule) under the named emulated topology
-            from repro.dsm.placement import PlacementPolicy
-            placement = PlacementPolicy(topology)
-        store = SessionStore(DSMPool(pool_path), mode=commit_mode,
-                             n_shards=n_shards, retention=retention,
-                             fault_hook=fault_hook, placement=placement)
+    if dsm is None and pool_path is not None:
+        # cost-driven shard count (and, with commit_mode="auto", the
+        # schedule) come from the topology's placement policy, built by
+        # the config at open time
+        dsm = CXL0Config(path=pool_path, schedule=commit_mode,
+                         n_shards=n_shards, retention=retention,
+                         topology=topology, fault_hook=fault_hook)
+    if dsm is not None:
+        store = SessionStore(ctx=dsm.open())
     engine = ServeEngine(bundle, params, n_slots=n_slots, t_max=t_max,
                          ctx=ctx, store=store, commit_every=commit_every,
                          restore_mode=restore_mode, retire_done=retire_done)

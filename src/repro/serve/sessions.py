@@ -30,10 +30,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Dict, List, Optional, Tuple
 
-from repro.dsm.flit_runtime import DurableCommitter
+from repro.dsm.api import CXL0Context, open_cxl0
 from repro.dsm.pool import DSMPool
-from repro.dsm.recovery import RecoveryManager
-from repro.dsm.tiers import TierManager
 
 KV_PREFIX = "kv/"
 
@@ -84,17 +82,30 @@ class RecoveredState:
 
 
 class SessionStore:
-    def __init__(self, pool: DSMPool, *, worker_id: int = 0,
+    def __init__(self, pool: Optional[DSMPool] = None, *, worker_id: int = 0,
                  mode: str = "sync", n_shards: Optional[int] = None,
                  retention: Optional[int] = 2,
-                 fault_hook=None, placement=None):
-        self.pool = pool
-        self.tiers = TierManager(pool, worker_id)
-        self.placement = placement      # cost-driven shard count/schedule
-        self.committer = DurableCommitter(
-            self.tiers, mode=mode, n_shards=n_shards, retention=retention,
-            fault_hook=fault_hook, placement=placement)
-        self.recovery = RecoveryManager(pool)
+                 fault_hook=None, placement=None,
+                 ctx: Optional[CXL0Context] = None):
+        """Either hand in an already-open ``CXL0Context`` (the launchers'
+        ``CXL0Config`` path) or a pool + the legacy kwargs — the latter are
+        routed through ``open_cxl0`` so there is ONE wiring path."""
+        if ctx is None:
+            ctx = open_cxl0(pool, worker_id, schedule=mode,
+                            n_shards=n_shards, retention=retention,
+                            fault_hook=fault_hook, placement=placement)
+        self.ctx = ctx
+        self.pool = ctx.pool
+        self.placement = ctx.placement  # cost-driven shard count/schedule
+        self.recovery = ctx.recovery
+
+    @property
+    def tiers(self):
+        return self.ctx.tiers
+
+    @property
+    def committer(self):
+        return self.ctx.committer
 
     # -- commit side ---------------------------------------------------------
     def stage(self, session: Session, cache1: Any):
@@ -109,18 +120,20 @@ class SessionStore:
         self.tiers.ldiscard(kv_name(rid))
 
     def commit(self, sessions: Dict[str, Session], step: int):
-        """Alg. 2 commit: RFlush every staged cache, then one completeOp
-        manifest carrying the session table."""
+        """Alg. 2 commit as ONE commit region: RFlush every staged cache,
+        then exactly one completeOp manifest carrying the session table."""
         meta = {"kind": "serve",
                 "sessions": {rid: s.to_meta()
                              for rid, s in sessions.items()}}
-        return self.committer.commit(step, meta=meta)
+        with self.ctx.commit(step, meta=meta) as txn:
+            pass                # caches were staged via ``stage``
+        return txn.stats
 
     def drain(self):
-        return self.committer.drain()
+        return self.ctx.drain()
 
     def close(self):
-        self.tiers.close()
+        self.ctx.close()
 
     # -- recovery side -------------------------------------------------------
     def recover(self, cache_template) -> Optional[RecoveredState]:

@@ -28,10 +28,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data.pipeline import DataPipeline, PipelineState
-from repro.dsm.flit_runtime import DurableCommitter
+from repro.dsm.api import CXL0Context, open_cxl0
 from repro.dsm.pool import DSMPool
-from repro.dsm.recovery import CrashError, ColdStartError, RecoveryManager
-from repro.dsm.tiers import TierManager
+from repro.dsm.recovery import CrashError, ColdStartError
 from repro.train.state import TrainState
 
 
@@ -119,15 +118,23 @@ def run_durable_loop(
     there; the restarted process passes ``resume=True`` to recover from the
     pool instead of re-committing a fresh step -1 (which would shadow newer
     manifests).
+
+    ``pool`` may be a ``DSMPool`` (or pool path) — the loop then opens a
+    ``CXL0Context`` from the wiring kwargs — or an already-open
+    ``CXL0Context`` (e.g. from a launcher's ``CXL0Config``), in which case
+    the context's own wiring wins and the kwargs above only drive the loop
+    (cadence, crash injection, resume).
     """
-    peers = (tuple(peer_tiers) if isinstance(peer_tiers, (tuple, list))
-             else (peer_tiers,) if peer_tiers is not None else ())
-    tiers = TierManager(pool, worker_id)
-    committer = DurableCommitter(
-        tiers, mode=commit_mode, n_shards=n_shards, retention=retention,
-        fault_hook=fault_hook, placement=placement,
-        replicate_to=peers[0] if (replicate and peers) else None)
-    recovery = RecoveryManager(pool)
+    if isinstance(pool, CXL0Context):
+        ctx = pool
+    else:
+        peers = (tuple(peer_tiers) if isinstance(peer_tiers, (tuple, list))
+                 else (peer_tiers,) if peer_tiers is not None else ())
+        ctx = open_cxl0(
+            pool, worker_id, schedule=commit_mode, n_shards=n_shards,
+            retention=retention, placement=placement, peers=peers,
+            replicate_to=peers[0] if (replicate and peers) else None,
+            fault_hook=fault_hook)
     templates = _state_objects(init_state, pipeline.state)
 
     state = init_state
@@ -141,7 +148,7 @@ def run_durable_loop(
     i = 0
     if resume:
         try:
-            objs, rec_step, source = recovery.recover(templates, peers)
+            objs, rec_step, source = ctx.recover(templates)
             state, pipe_state = _objects_to_state(objs, state)
             pipeline.state = pipe_state
             recoveries.append(source)
@@ -153,9 +160,10 @@ def run_durable_loop(
             #  over an existing history would shadow every newer manifest)
     if resumed_from is None:
         # initial durable state (step -1): a cold restart is always possible
-        committer.update(_state_objects(state, pipeline.state), step=-1)
-        committer.commit(-1)
-        committer.drain()
+        ctx.put(_state_objects(state, pipeline.state), step=-1)
+        with ctx.commit(-1):
+            pass
+        ctx.drain()
     while i < n_steps:
         plan = crash_at.get(i)
         try:
@@ -167,7 +175,7 @@ def run_durable_loop(
             losses.append(float(metrics["loss"]))
             t1 = time.perf_counter()
 
-            committer.update(_state_objects(state, pipeline.state), step=i)
+            ctx.put(_state_objects(state, pipeline.state), step=i)
 
             if plan == "before_commit":
                 raise CrashError(f"injected before commit of step {i}")
@@ -177,11 +185,12 @@ def run_durable_loop(
                 if plan == "mid_write":
                     # simulate dying midway through the durable write: some
                     # objects reach the pool, the manifest does NOT
-                    for name in list(tiers.hbm)[:2]:
-                        tiers.rflush(name)
+                    for name in list(ctx.tiers.hbm)[:2]:
+                        ctx.tiers.rflush(name)
                     raise CrashError(f"injected mid-write at step {i}")
                 tc = time.perf_counter()
-                committer.commit(i)
+                with ctx.commit(i):
+                    pass
                 commit_s = time.perf_counter() - tc
                 if plan == "after_commit":
                     raise CrashError(f"injected after commit of step {i}")
@@ -191,21 +200,21 @@ def run_durable_loop(
         except CrashError:
             crashes += 1
             crash_at.pop(i, None)
-            committer.abort_pending()     # join+discard in-flight flushes
-            tiers.crash()                 # f_i: volatile tiers vanish
+            ctx.crash()       # f_i: abort in-flight flushes, volatile tiers
+            #                   vanish
             # --- recovery (new worker incarnation) -------------------------
-            objs, rec_step, source = recovery.recover(templates, peers)
+            objs, rec_step, source = ctx.recover(templates)
             state, pipe_state = _objects_to_state(objs, state)
             pipeline.state = pipe_state
             recoveries.append(source)
             i = rec_step + 1
 
     td = time.perf_counter()
-    drained = committer.drain()
+    drained = ctx.drain()
     if drained is not None:
         # the tail flush join is real blocking commit time (it overlaps no
         # compute) — charge it so schedule comparisons stay honest
         timings.append(StepTiming(n_steps, 0.0, time.perf_counter() - td))
-    tiers.close()
+    ctx.close()
     return LoopResult(state, pipeline.state, losses, timings, recoveries,
                       crashes, resumed_from)

@@ -1,0 +1,45 @@
+"""Examples-smoke: every example executes headless end to end, so API
+drift in the examples can never recur (they are real programs against the
+public surface, not snippets).  Budgets are kept small via CLI flags; the
+CI `examples-smoke` job runs exactly this module."""
+import os
+import subprocess
+import sys
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+EXAMPLES = os.path.join(REPO, "examples")
+
+
+def run_example(name, *args, timeout=900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(REPO, "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(EXAMPLES, name), *args],
+        env=env, capture_output=True, text=True, timeout=timeout)
+    assert proc.returncode == 0, (
+        f"{name} failed (rc={proc.returncode})\n"
+        f"stdout: {proc.stdout[-2000:]}\nstderr: {proc.stderr[-2000:]}")
+    return proc.stdout
+
+
+def test_quickstart_runs_all_four_acts():
+    out = run_example("quickstart.py")
+    assert "Act 1" in out and "Act 4" in out
+    assert "durably linearizable" in out
+
+
+def test_durable_kv_example():
+    out = run_example("durable_kv.py")
+    assert "recovered state == acknowledged" in out
+
+
+def test_train_durable_example():
+    out = run_example("train_durable.py", "--steps", "8")
+    assert "identical to clean run: True" in out
+
+
+def test_serve_example():
+    out = run_example("serve.py", "--requests", "4", "--slots", "2")
+    assert "requests" in out and "tokens" in out
