@@ -1,0 +1,55 @@
+"""Adversarial crash-fuzzer bench: a pinned slice of the fuzz suite as a
+gated regression metric.
+
+Every episode is a pure function of (seed, config, schedule), so the
+counts below are bit-deterministic: the gate pins the invariant-violation
+count to 0 AND the kill / torn-write / recovery counts to their exact
+values — a refactor that silently stops injecting faults (or stops
+recovering from them) shows up as a count drop, not just as green tests.
+"""
+from __future__ import annotations
+
+import time
+
+try:
+    from benchmarks.harness import Bench
+except ImportError:                      # standalone: python benchmarks/...
+    from harness import Bench
+
+EPISODES = 3
+SEED = 0
+
+
+def main():
+    import tempfile
+
+    from repro.scenarios.fuzz import TOPOLOGIES, WORKLOADS, run_fuzz_suite
+
+    t0 = time.perf_counter()
+    with tempfile.TemporaryDirectory(prefix="bench-fuzz-") as d:
+        s = run_fuzz_suite(d, episodes=EPISODES, seed=SEED, shrink=False)
+    dt = time.perf_counter() - t0
+
+    bench = Bench("fuzz")
+    bench.set_config(episodes_per_cell=EPISODES, seed=SEED,
+                     workloads=list(WORKLOADS), topologies=list(TOPOLOGIES))
+    bench.record("fuzz_episodes", s.episodes,
+                 f"{EPISODES} x {len(WORKLOADS)} workloads x "
+                 f"{len(TOPOLOGIES)} topologies")
+    bench.record("fuzz_invariant_violations", s.violations,
+                 "recovery != newest completed commit, or not bit-identical")
+    bench.record("fuzz_kills_fired", s.kills_fired,
+                 "scheduled worker deaths that actually landed")
+    bench.record("fuzz_torn_writes", s.torn_writes,
+                 "durable writes corrupted after their rename")
+    bench.record("fuzz_recoveries", s.recoveries,
+                 "checked recovery invocations (incl. forced finals)")
+    bench.record("fuzz_cold_starts", s.cold_starts,
+                 "episodes that legitimately had nothing recoverable")
+    bench.record("fuzz_episodes_per_s", s.episodes / dt,
+                 "suite wall-clock throughput", fmt=".1f")
+    bench.write()
+
+
+if __name__ == "__main__":
+    main()

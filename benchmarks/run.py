@@ -23,7 +23,7 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 def main() -> None:
     from benchmarks import (bench_latency, bench_table1, bench_flit,
-                            bench_checkpoint, bench_cluster,
+                            bench_checkpoint, bench_cluster, bench_fuzz,
                             bench_model_fuzz, bench_placement, bench_serve)
     modules = [
         ("fig5 latency model", bench_latency),
@@ -33,6 +33,7 @@ def main() -> None:
         ("multi-writer cluster protocol", bench_cluster),
         ("continuous-batching serving (static vs slots)", bench_serve),
         ("vectorized semantics fuzzing", bench_model_fuzz),
+        ("adversarial crash fuzzing (end-to-end DSM)", bench_fuzz),
         ("cost-driven placement over emulated topologies", bench_placement),
     ]
     for title, mod in modules:

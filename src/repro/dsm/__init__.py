@@ -35,6 +35,10 @@ from repro.dsm.recovery import (ColdStartError, CrashError,  # noqa: F401
 from repro.dsm.api import (CXL0Config, CXL0Context,  # noqa: F401
                            CommitRegion, DurableHandle, TransformedObject,
                            open_cxl0)
+from repro.dsm.faults import (FaultInjector, FaultSchedule,  # noqa: F401
+                              FaultyPool, InjectedCrash, KillSpec,
+                              StragglerSpec, TornSpec, attach_faults,
+                              corrupt_file)
 
 __all__ = [
     # the unified programming-model API (use this)
@@ -43,4 +47,7 @@ __all__ = [
     # primitive-level building blocks (the context owns these for you)
     "DSMPool", "PoolObject", "TierManager", "DurableCommitter",
     "RecoveryManager", "CrashError", "ColdStartError",
+    # injectable fault layer (the adversarial crash fuzzer's substrate)
+    "FaultyPool", "FaultSchedule", "KillSpec", "TornSpec", "StragglerSpec",
+    "FaultInjector", "attach_faults", "InjectedCrash", "corrupt_file",
 ]

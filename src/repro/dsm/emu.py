@@ -34,7 +34,8 @@ from __future__ import annotations
 import dataclasses
 import functools
 import threading
-from typing import Any, Dict, List
+import time
+from typing import Any, Dict, List, Optional
 
 import numpy as np
 
@@ -202,14 +203,23 @@ class TopologyEmulator:
     CALL time (program order), so the same (topology, seed, op sequence)
     always yields the identical priced trace — asserted in
     tests/test_emu.py and relied on by the CI bench gate.
+
+    ``fault_model`` is an optional straggler/slow-writer model (anything
+    with ``perturb(seq, op, name) -> (cost_multiplier, sleep_seconds)``,
+    e.g. ``repro.dsm.faults.StragglerSpec``): the multiplier scales the
+    priced cost — seeded by trace position, so still deterministic — and
+    the sleep is a real capped stall applied OUTSIDE the trace lock, so
+    concurrent flush pipelines genuinely reorder under the perturbation
+    without perturbing the trace itself.
     """
 
     #: max fractional queueing jitter applied per op (+/-)
     JITTER = 0.02
 
-    def __init__(self, topology, *, seed: int = 0):
+    def __init__(self, topology, *, seed: int = 0, fault_model=None):
         self.topology = get_topology(topology)
         self.seed = seed
+        self.fault_model = fault_model
         self.trace: List[PricedOp] = []
         self._rng = np.random.default_rng(seed)
         self._lock = threading.Lock()
@@ -233,13 +243,20 @@ class TopologyEmulator:
                n_streams: int = 1) -> PricedOp:
         """Price one op and append it to the trace (thread-safe; jitter is
         consumed under the lock so trace order defines the draw order)."""
+        sleep_s = 0.0
         with self._lock:
             jitter = 1.0 + self.JITTER * float(self._rng.uniform(-1.0, 1.0))
             cost = self._base_ns(op, nbytes, n_streams) * jitter
+            if self.fault_model is not None:
+                mult, sleep_s = self.fault_model.perturb(
+                    len(self.trace), op, name)
+                cost *= mult
             po = PricedOp(len(self.trace), op, name, int(nbytes),
                           n_streams, cost)
             self.trace.append(po)
-            return po
+        if sleep_s > 0.0:
+            time.sleep(sleep_s)    # a real stall, outside the trace lock
+        return po
 
     # -- summaries -----------------------------------------------------------
     def total_ns(self) -> float:

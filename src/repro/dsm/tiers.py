@@ -146,12 +146,24 @@ class TierManager:
         assignment = partition_leaves([a.nbytes for a in leaves], n_shards)
         ex = self._get_executor(len(assignment))
         futs = []
-        for k, idxs in enumerate(assignment):
-            futs.append(ex.submit(self.pool.write_object, f"{name}.s{k}",
-                                  version, [leaves[i] for i in idxs]))
-            if k == 0 and post_first_shard is not None:
-                futs[0].result()
-                post_first_shard()
+        try:
+            for k, idxs in enumerate(assignment):
+                futs.append(ex.submit(self.pool.write_object, f"{name}.s{k}",
+                                      version, [leaves[i] for i in idxs]))
+                if k == 0 and post_first_shard is not None:
+                    futs[0].result()
+                    post_first_shard()
+        except BaseException:
+            # the mid-flush hook (fault injection) may raise between
+            # submissions: already-submitted shard writes must fully land
+            # (or fail) before the caller unwinds, else an untracked stale
+            # write could race a later incarnation's version reuse
+            for f in futs:
+                try:
+                    f.result()
+                except Exception:
+                    pass
+            raise
         return version, len(leaves), assignment, futs
 
     def _shard_join(self, name: str, version: int, n_leaves: int,
@@ -191,8 +203,12 @@ class TierManager:
         until the join, so a concurrent joiner knows the pool copy may be
         stale."""
         self.flit_counter[name] = self.flit_counter.get(name, 0) + 1
-        self._sharded_futures[name] = self._shard_submit(
-            name, n_shards, post_first_shard)
+        try:
+            self._sharded_futures[name] = self._shard_submit(
+                name, n_shards, post_first_shard)
+        except BaseException:
+            self.flit_counter[name] -= 1     # nothing tracked -> no join
+            raise
 
     # -- async flush (compute/IO overlap) ------------------------------------
     def flush_async(self, name: str):

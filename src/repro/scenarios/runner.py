@@ -124,7 +124,11 @@ def run_scenario(kill_point: str, workdir: str, *, steps: int = 8,
                  kill_step: Optional[int] = None, model: str = "toy",
                  ref_digest: Optional[int] = None,
                  timeout: int = 600) -> ScenarioResult:
-    assert kill_point in KILL_POINTS, kill_point
+    # a real raise, not an assert: under ``python -O`` an assert silently
+    # accepts a bogus kill point and the scenario "passes" vacuously
+    if kill_point not in KILL_POINTS:
+        raise ValueError(f"unknown kill point {kill_point!r}; "
+                         f"expected one of {KILL_POINTS}")
     if kill_step is None:
         # the second commit point: at least one real commit precedes the kill
         kill_step = 2 * commit_every - 1
@@ -238,7 +242,9 @@ def run_serve_scenario(kill_point: str, workdir: str, *, requests: int = 10,
                        kill_step: int = 6,
                        ref_outputs: Optional[dict] = None,
                        timeout: int = 600) -> ServeScenarioResult:
-    assert kill_point in KILL_POINTS, kill_point
+    if kill_point not in KILL_POINTS:
+        raise ValueError(f"unknown kill point {kill_point!r}; "
+                         f"expected one of {KILL_POINTS}")
     pool = os.path.join(workdir, f"serve_{kill_point}_{restore_mode}")
 
     # 1. kill phase: die inside the session-commit window
@@ -295,7 +301,7 @@ def main(argv=None) -> int:
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--suite", default="train",
-                    choices=["train", "serve", "cluster", "all"])
+                    choices=["train", "serve", "cluster", "fuzz", "all"])
     ap.add_argument("--workdir", default=None)
     ap.add_argument("--steps", type=int, default=8)
     ap.add_argument("--commit-every", type=int, default=2)
@@ -323,10 +329,30 @@ def main(argv=None) -> int:
                     help="cluster suite: recovery sources to exercise "
                          "(peer = sibling staging newer than the pool, "
                          "pool = replication off)")
+    ap.add_argument("--episodes", type=int, default=10,
+                    help="fuzz suite: episodes per (workload, topology)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="fuzz suite: base seed of every episode draw")
+    ap.add_argument("--topology", default="all",
+                    help="fuzz suite: one topology preset, or 'all'")
+    ap.add_argument("--fuzz-workloads", default="train,serve,cluster",
+                    help="fuzz suite: comma-separated workload subset")
     args = ap.parse_args(argv)
     workdir = args.workdir or tempfile.mkdtemp(prefix="scenarios_")
     failed = 0
-    if args.suite in ("train", "all"):
+
+    def _suite_guard(name, fn):
+        """A crashed suite is a FAILED suite, and the remaining suites
+        still run — no assert-and-continue, no masked exit code."""
+        nonlocal failed
+        try:
+            fn()
+        except Exception as e:                  # noqa: BLE001
+            failed += 1
+            print(f"runner_error,{name},{type(e).__name__}: {e}")
+
+    def _train_suite():
+        nonlocal failed
         for r in run_suite(workdir, steps=args.steps,
                            commit_every=args.commit_every, mode=args.mode,
                            shards=args.shards, model=args.model):
@@ -337,7 +363,9 @@ def main(argv=None) -> int:
                   f"resumed={r.resumed_from},source={r.recovery_source},"
                   f"digest_match={r.final_digest == r.reference_digest}"
                   + (f",detail={r.detail}" if r.detail else ""))
-    if args.suite in ("serve", "all"):
+
+    def _serve_suite():
+        nonlocal failed
         for r in run_serve_suite(workdir, requests=args.requests,
                                  slots=args.slots,
                                  restore_mode=args.restore_mode):
@@ -350,7 +378,9 @@ def main(argv=None) -> int:
                   f"recovered_done={r.recovered_done},"
                   f"outputs_bit_identical={r.outputs_match}"
                   + (f",detail={r.detail}" if r.detail else ""))
-    if args.suite in ("cluster", "all"):
+
+    def _cluster_suite():
+        nonlocal failed
         from repro.scenarios.cluster import run_cluster_suite
         points = [p for p in args.kill_points.split(",") if p]
         srcs = [s for s in args.cluster_sources.split(",") if s]
@@ -371,6 +401,41 @@ def main(argv=None) -> int:
                   f"expected=({r.expected_resume},{r.expected_source}),"
                   f"digest_match={r.digests == r.reference_digests}"
                   + (f",detail={r.detail}" if r.detail else ""))
+
+    def _fuzz_suite():
+        nonlocal failed
+        from repro.dsm.emu import PRESETS
+        from repro.scenarios.fuzz import run_fuzz_suite
+        topos = (sorted(PRESETS) if args.topology == "all"
+                 else [args.topology])
+        workloads = [w for w in args.fuzz_workloads.split(",") if w]
+        s = run_fuzz_suite(os.path.join(workdir, "fuzz"),
+                           episodes=args.episodes, seed=args.seed,
+                           topologies=topos, workloads=workloads)
+        for cell in s.cells:
+            status = "OK" if not cell["violations"] else "FAIL"
+            print(f"fuzz,{cell['workload']},{cell['topology']},{status},"
+                  f"episodes={cell['episodes']},kills={cell['kills']},"
+                  f"torn={cell['torn']},recoveries={cell['recoveries']},"
+                  f"cold_starts={cell['cold_starts']},"
+                  f"violations={cell['violations']}")
+        failed += s.violations
+        for p in s.reproducers:
+            print(f"fuzz_reproducer,{p}")
+        print(f"fuzz_summary,episodes={s.episodes},"
+              f"violations={s.violations},kills={s.kills_fired},"
+              f"torn={s.torn_writes},recoveries={s.recoveries},"
+              f"log={s.log_path}")
+
+    if args.suite in ("train", "all"):
+        _suite_guard("train", _train_suite)
+    if args.suite in ("serve", "all"):
+        _suite_guard("serve", _serve_suite)
+    if args.suite in ("cluster", "all"):
+        _suite_guard("cluster", _cluster_suite)
+    if args.suite in ("fuzz", "all"):
+        _suite_guard("fuzz", _fuzz_suite)
+    print(f"runner,{'FAIL' if failed else 'OK'},failed={failed}")
     return 1 if failed else 0
 
 

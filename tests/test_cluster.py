@@ -207,6 +207,32 @@ def test_cluster_commit_waits_for_all_records(tmp_path):
     assert proto.find_manifest(0) is None
 
 
+@pytest.mark.parametrize("point", ["pre_flush", "mid_flush",
+                                   "post_completeOp"])
+@pytest.mark.parametrize("replicate", [True, False])
+def test_kill_matrix_cell_via_fuzzer_corpus(tmp_path, point, replicate):
+    """The legacy 6-cell kill matrix (3 commit-window points x replicate
+    on/off) as pinned fault schedules of the adversarial fuzzer: rank 1
+    dies at ``point`` of the second commit, and the episode's oracle must
+    agree with the hand-derived ``expected_recovery`` table — a
+    post-completeOp kill resumes from the just-durable pool manifest,
+    earlier points from peer staging iff replication is on, else from
+    the previous commit."""
+    from repro.scenarios.cluster import expected_recovery
+    from repro.scenarios.fuzz import corpus_cluster_cell
+    kill_step, commit_every = 3, 2
+    res = corpus_cluster_cell(point, replicate, str(tmp_path),
+                              commit_every=commit_every,
+                              kill_step=kill_step)
+    assert res.ok, res.violations
+    assert len(res.kills_fired) == 1
+    assert res.kills_fired[0]["worker"] == 1
+    rec = res.recoveries[0]
+    assert "victim" in rec and rec["victim"] == 1
+    assert (rec["step"], rec["source"]) == expected_recovery(
+        point, replicate, kill_step, commit_every)
+
+
 @pytest.mark.slow
 def test_kill_one_of_three_matches_planned_shrink(tmp_path):
     """End-to-end (real processes): kill rank 1 of 3 at pre_flush; the

@@ -1,0 +1,205 @@
+"""The adversarial crash fuzzer's own properties: episodes are a pure
+function of (seed, config, schedule); the invariant holds on the real
+stack under kills + torn writes; a deliberately broken recovery seam
+(REPRO_FUZZ_BREAK_RECOVERY) is CAUGHT, shrunk, and its minimal
+reproducer replays to the same violation; the runner propagates fuzz
+violations as a nonzero exit."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.dsm.faults import (FaultInjector, FaultSchedule, FaultyPool,
+                              InjectedCrash, KillSpec, StragglerSpec,
+                              TornSpec)
+from repro.scenarios.fuzz import (BREAK_ENV, EpisodeConfig, dump_reproducer,
+                                  make_episode, replay_reproducer,
+                                  run_episode, run_fuzz_suite)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# determinism
+# ---------------------------------------------------------------------------
+
+def test_make_episode_is_pure_in_the_seed_path():
+    a = make_episode([7, 3, 0, 1], "train", "cxl20-switch")
+    b = make_episode([7, 3, 0, 1], "train", "cxl20-switch")
+    assert a == b
+    drawn = {make_episode([7, ep, 0, 1], "train", "cxl20-switch")[1]
+             for ep in range(8)}
+    assert len(drawn) > 1, "8 episode draws produced one schedule"
+
+
+@pytest.mark.parametrize("workload", ["train", "serve", "cluster"])
+def test_episode_replay_is_bit_deterministic(workload, tmp_path):
+    cfg, sched = make_episode([0, 1, 0, 0], workload, "cxl11-direct")
+    r1 = run_episode(cfg, sched, str(tmp_path / "a"))
+    r2 = run_episode(cfg, sched, str(tmp_path / "b"))
+    assert r1.to_json() == r2.to_json()
+
+
+def test_torn_decisions_hash_identity_not_call_order():
+    spec = TornSpec(rate=0.2, salt=123)
+    first = [spec.decide(f"t{i}", v) for i in range(6) for v in range(6)]
+    second = [spec.decide(f"t{i}", v) for i in range(6) for v in range(6)]
+    assert first == second
+    assert any(m is not None for m in first), "rate=0.2 over 36 draws"
+    assert StragglerSpec(rate=0.5, salt=9).perturb(3, "rflush", "x") == \
+        StragglerSpec(rate=0.5, salt=9).perturb(3, "rflush", "x")
+
+
+def test_schedule_json_round_trip():
+    sched = FaultSchedule(
+        kills=(KillSpec(worker=1, op="rflush", index=4, phase="after"),
+               KillSpec(worker=0, point="mid_flush", at_step=3)),
+        torn=TornSpec(rate=0.1, salt=5, modes=("bitflip",)),
+        straggler=StragglerSpec(rate=0.2, salt=6))
+    assert FaultSchedule.from_dict(
+        json.loads(json.dumps(sched.to_dict()))) == sched
+
+
+# ---------------------------------------------------------------------------
+# the invariant holds on the real stack
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("workload", ["train", "serve", "cluster"])
+def test_clean_episode_has_no_violations(workload, tmp_path):
+    cfg = EpisodeConfig(workload=workload)
+    res = run_episode(cfg, FaultSchedule(), str(tmp_path))
+    assert res.ok, res.violations
+    assert res.kills_fired == [] and res.torn_writes == 0
+    # the forced final crash still exercises one recovery per episode
+    assert res.recoveries
+
+
+def test_kill_mid_commit_recovers_to_completed_commit(tmp_path):
+    cfg = EpisodeConfig(workload="train", mode="sharded-async")
+    sched = FaultSchedule(kills=(
+        KillSpec(worker=0, op="rflush", index=5, phase="before"),))
+    res = run_episode(cfg, sched, str(tmp_path))
+    assert res.ok, res.violations
+    assert len(res.kills_fired) == 1
+    assert res.kills_fired[0]["op"] == "rflush"
+
+
+def test_torn_writes_never_recovered_from(tmp_path):
+    cfg = EpisodeConfig(workload="train")
+    sched = FaultSchedule(
+        kills=(KillSpec(worker=0, op="completeOp", index=2, phase="after"),),
+        torn=TornSpec(rate=0.4, salt=11))
+    res = run_episode(cfg, sched, str(tmp_path))
+    assert res.ok, res.violations
+    assert res.torn_writes > 0
+
+
+# ---------------------------------------------------------------------------
+# the invariant has teeth: a broken seam is caught + reproducible
+# ---------------------------------------------------------------------------
+
+def test_broken_recovery_is_caught_and_reproducer_replays(tmp_path,
+                                                          monkeypatch):
+    monkeypatch.setenv(BREAK_ENV, "1")
+    cfg, sched = make_episode([0, 0, 0, 0], "train", "cxl11-direct")
+    res = run_episode(cfg, sched, str(tmp_path / "run"))
+    assert not res.ok, "stale-state swap at the seam went unnoticed"
+    path = dump_reproducer(str(tmp_path), [0, 0, 0, 0], cfg, sched, res,
+                           shrink=True)
+    doc = json.load(open(path))
+    assert doc["kind"] == "cxl0-fuzz-reproducer" and doc["violations"]
+    replay = replay_reproducer(path)
+    assert replay.violations == res.violations
+
+
+def test_suite_counts_violations_and_dumps_reproducers(tmp_path,
+                                                       monkeypatch):
+    monkeypatch.setenv(BREAK_ENV, "1")
+    s = run_fuzz_suite(str(tmp_path), episodes=1, seed=0,
+                       topologies=["cxl11-direct"], workloads=["train"],
+                       shrink=False)
+    assert s.episodes == 1 and s.violations >= 1
+    assert len(s.reproducers) == 1 and os.path.exists(s.reproducers[0])
+    assert os.path.exists(s.log_path)
+    logged = [json.loads(l) for l in open(s.log_path)]
+    assert len(logged) == 1 and logged[0]["violations"]
+
+
+# ---------------------------------------------------------------------------
+# fault primitives in isolation
+# ---------------------------------------------------------------------------
+
+def test_injector_fires_at_exact_index_once():
+    sched = FaultSchedule(kills=(
+        KillSpec(worker=0, op="lstore", index=2, phase="before"),))
+    inj = FaultInjector(sched, worker=0)
+    inj.begin("lstore", "a")
+    inj.begin("lstore", "b")
+    with pytest.raises(InjectedCrash) as ei:
+        inj.begin("lstore", "c")
+    assert (ei.value.op, ei.value.index) == ("lstore", 2)
+    # the spec is spent: the next incarnation's calls pass through
+    for _ in range(5):
+        inj.begin("lstore", "d")
+    assert inj.counts["lstore"] == 8
+
+
+def test_injector_ignores_other_workers():
+    sched = FaultSchedule(kills=(
+        KillSpec(worker=1, op="rflush", index=0, phase="before"),))
+    inj0 = FaultInjector(sched, worker=0)
+    inj0.begin("rflush", "x")           # not our kill
+    inj1 = FaultInjector(sched, worker=1)
+    with pytest.raises(InjectedCrash):
+        inj1.begin("rflush", "x")
+
+
+def test_killspec_validates_addressing_mode():
+    with pytest.raises(ValueError):
+        KillSpec(worker=0)                          # neither op nor point
+    with pytest.raises(ValueError):
+        KillSpec(worker=0, op="rflush", point="pre_flush")   # both
+    with pytest.raises(ValueError):
+        KillSpec(worker=0, op="warp")
+
+
+def test_faulty_pool_ledger_matches_spec(tmp_path):
+    import numpy as np
+    spec = TornSpec(rate=0.5, salt=3)
+    pool = FaultyPool(str(tmp_path), torn=spec)
+    for v in range(1, 9):
+        pool.write_object("t", v, {"a": np.arange(4.0) * v})
+    expected = [("t", v, spec.decide("t", v)) for v in range(1, 9)
+                if spec.decide("t", v) is not None]
+    assert pool.injected == expected
+
+
+# ---------------------------------------------------------------------------
+# runner integration (subprocess: the real exit-code contract)
+# ---------------------------------------------------------------------------
+
+def _run_runner(workdir, extra_env=None):
+    env = {**os.environ, "PYTHONPATH": os.path.join(REPO, "src"),
+           "JAX_PLATFORMS": "cpu", **(extra_env or {})}
+    return subprocess.run(
+        [sys.executable, "-m", "repro.scenarios.runner", "--suite", "fuzz",
+         "--episodes", "1", "--seed", "0", "--topology", "cxl11-direct",
+         "--fuzz-workloads", "train", "--workdir", str(workdir)],
+        capture_output=True, text=True, env=env, timeout=300)
+
+
+def test_runner_fuzz_suite_green_exits_zero(tmp_path):
+    p = _run_runner(tmp_path)
+    assert p.returncode == 0, p.stdout + p.stderr
+    assert "runner,OK,failed=0" in p.stdout
+
+
+def test_runner_propagates_fuzz_violation_as_nonzero_exit(tmp_path):
+    p = _run_runner(tmp_path, {BREAK_ENV: "1"})
+    assert p.returncode != 0, p.stdout + p.stderr
+    assert "runner,FAIL" in p.stdout and "fuzz_reproducer," in p.stdout
+    repros = [f for f in os.listdir(tmp_path / "fuzz")
+              if f.startswith("repro_") and f.endswith(".json")]
+    assert repros, "violated run left no reproducer JSON"

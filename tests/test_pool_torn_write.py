@@ -1,0 +1,130 @@
+"""Torn durable writes against the pool's defenses: a payload corrupted
+AFTER its atomic rename (visible but wrong — the CXL shared-memory
+failure mode) must be rejected by the CRC/zip validation path, and
+recovery must fall back past the poisoned commit instead of adopting it.
+Covers all three torn modes, sharded objects (one bad shard poisons the
+whole object), and the spill-file staging area's meta/payload CRC guard."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.dsm.cluster import FileStagingArea
+from repro.dsm.faults import TORN_MODES, FaultyPool, TornSpec, corrupt_file
+from repro.dsm.pool import CorruptObjectError, DSMPool
+from repro.dsm.recovery import ColdStartError, RecoveryManager
+from repro.dsm.tiers import TierManager
+
+
+def _tree(seed: float):
+    return {"w": np.full((6, 6), seed, np.float32),
+            "b": np.arange(6, dtype=np.float32) + seed}
+
+
+TPL = {"t": _tree(0.0)}
+
+
+@pytest.mark.parametrize("mode", TORN_MODES)
+def test_each_torn_mode_is_detected(tmp_path, mode):
+    pool = DSMPool(str(tmp_path))
+    pool.write_object("t", 1, _tree(1.0))
+    corrupt_file(pool._obj_path("t", 1) + ".npz", mode)
+    with pytest.raises(CorruptObjectError):
+        pool.read_object("t", 1, _tree(0.0))
+
+
+@pytest.mark.parametrize("mode", TORN_MODES)
+def test_recovery_falls_back_past_torn_commit(tmp_path, mode):
+    pool = FaultyPool(str(tmp_path))
+    good = pool.write_object("t", 1, _tree(1.0))
+    pool.commit_manifest(0, {"t": good})
+    pool.force_corrupt("t", 2, mode)
+    bad = pool.write_object("t", 2, _tree(2.0))
+    pool.commit_manifest(1, {"t": bad})
+    assert pool.injected == [("t", 2, mode)]
+    objs, step, source = RecoveryManager(pool).recover(TPL)
+    assert (step, source) == (0, "pool")
+    np.testing.assert_array_equal(objs["t"]["w"], _tree(1.0)["w"])
+
+
+def test_all_commits_torn_means_cold_start(tmp_path):
+    pool = FaultyPool(str(tmp_path), torn=TornSpec(rate=1.0))
+    obj = pool.write_object("t", 1, _tree(1.0))
+    pool.commit_manifest(0, {"t": obj})
+    with pytest.raises(ColdStartError):
+        RecoveryManager(pool).recover(TPL)
+
+
+def test_one_torn_shard_poisons_the_whole_object(tmp_path):
+    pool = FaultyPool(str(tmp_path))
+    tiers = TierManager(pool, worker_id=0)
+    try:
+        tiers.lstore("t", _tree(1.0))
+        pool.commit_manifest(0, {"t": tiers.rflush_sharded("t", 2)})
+        tiers.lstore("t", _tree(2.0))
+        # tear ONE shard of the newer commit after it fully landed
+        pool.force_corrupt("t.s1", 2, "bitflip")
+        pool.commit_manifest(1, {"t": tiers.rflush_sharded("t", 2)})
+    finally:
+        tiers.close()
+    sharded_entry = pool.manifests_desc()[0]["objects"]["t"]
+    with pytest.raises(CorruptObjectError):
+        pool.read_entry("t", sharded_entry, _tree(0.0))
+    objs, step, _ = RecoveryManager(pool).recover(TPL)
+    assert step == 0
+    np.testing.assert_array_equal(objs["t"]["b"], _tree(1.0)["b"])
+
+
+def test_manifest_crc_guards_against_overwritten_payload(tmp_path):
+    """The file+sidecar pair is internally consistent but describes
+    DIFFERENT bytes than the manifest recorded: read_entry must reject."""
+    pool = DSMPool(str(tmp_path))
+    obj = pool.write_object("t", 1, _tree(1.0))
+    pool.commit_manifest(0, {"t": obj})
+    pool.write_object("t", 1, _tree(9.0))      # same version, new content
+    entry = pool.manifests_desc()[0]["objects"]["t"]
+    with pytest.raises(CorruptObjectError):
+        pool.read_entry("t", entry, _tree(0.0))
+
+
+def test_torn_spill_is_discarded_by_staging_view(tmp_path):
+    area = FileStagingArea(str(tmp_path / "stage"))
+    area.proxy(1).staging["w0/t"] = (5, _tree(3.0))
+    base = os.path.join(area.area(1), "w0__t")
+    corrupt_file(base + ".npz", "truncate")
+    assert area.view(1, {"w0/t": _tree(0.0)}).staging == {}
+
+
+def test_mislabeled_spill_meta_payload_pair_is_discarded(tmp_path):
+    """Writer died between the payload and meta renames: the meta on disk
+    describes the PREVIOUS payload.  The CRC in the meta must catch it."""
+    area = FileStagingArea(str(tmp_path / "stage"))
+    buf = area.proxy(1).staging
+    buf["w0/t"] = (5, _tree(3.0))
+    base = os.path.join(area.area(1), "w0__t")
+    old_meta = open(base + ".json").read()
+    buf["w0/t"] = (6, _tree(4.0))              # new payload lands...
+    with open(base + ".json", "w") as f:
+        f.write(old_meta)                       # ...under the OLD meta
+    assert area.view(1, {"w0/t": _tree(0.0)}).staging == {}
+    # a consistent pair is of course adopted
+    buf["w0/t"] = (7, _tree(5.0))
+    view = area.view(1, {"w0/t": _tree(0.0)})
+    assert view.staging["w0/t"][0] == 7
+    np.testing.assert_array_equal(view.staging["w0/t"][1]["w"],
+                                  _tree(5.0)["w"])
+
+
+def test_recovery_prefers_pool_over_torn_staging(tmp_path):
+    """Peer staging newer than the pool would normally win; torn, it must
+    lose — recovery lands on the durable commit, never a mangled copy."""
+    pool = FaultyPool(str(tmp_path / "pool"))
+    obj = pool.write_object("t", 1, _tree(1.0))
+    pool.commit_manifest(3, {"t": obj})
+    area = FileStagingArea(str(tmp_path / "stage"))
+    area.proxy(1).staging["t"] = (7, _tree(7.0))     # newer than step 3
+    corrupt_file(os.path.join(area.area(1), "t") + ".npz", "zero")
+    peer = area.view(1, TPL)
+    objs, step, source = RecoveryManager(pool).recover(TPL, (peer,))
+    assert (step, source) == (3, "pool")
+    np.testing.assert_array_equal(objs["t"]["w"], _tree(1.0)["w"])
