@@ -21,6 +21,7 @@ import tempfile
 import time
 
 import jax
+import numpy as np
 
 try:
     from benchmarks.harness import Bench
@@ -63,6 +64,44 @@ def run(mode: str, tmp: str, *, n_shards=1, replicate=False, crash=None):
 
 def blocking_commit_s(r) -> float:
     return sum(t.commit_s for t in r.timings)
+
+
+def bench_write_object_fast_path(bench, tmp: str, *, rows=8192,
+                                 row_bytes=512):
+    """The PR-7 pool-write gate: ``write_object`` (streamed frame, one
+    data pass, one fsync) vs ``write_object_legacy`` (np.savez + sidecar,
+    three passes, two fsyncs) on a fine-grained object — embedding-row
+    granularity, where the legacy per-zip-member overhead dominates.
+    Asserted as a RATIO so the gate is runner-independent."""
+    pool = DSMPool(f"{tmp}/fastpath")
+    tree = {f"row{i}": np.random.default_rng(i).standard_normal(
+                (row_bytes // 4,)).astype(np.float32)
+            for i in range(rows)}
+    mb = rows * row_bytes / 2**20
+
+    def run_writer(write, base_version):
+        write("emb", base_version, tree)             # warm (dirs, arena)
+        best = float("inf")
+        for v in (1, 2):
+            t0 = time.perf_counter()
+            write("emb", base_version + v, tree)
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    t_new = run_writer(pool.write_object, 10)
+    t_old = run_writer(pool.write_object_legacy, 20)
+    speedup = t_old / t_new
+    note = f"{rows} x {row_bytes} B float32 rows ({mb:.0f} MiB), fsync incl."
+    bench.record("ckpt_write_object_mb_s", mb / t_new,
+                 f"streamed write_object, {note}", fmt=".0f")
+    bench.record("ckpt_write_object_legacy_mb_s", mb / t_old,
+                 f"legacy np.savez write, {note}", fmt=".0f")
+    bench.record("ckpt_write_object_speedup_x", speedup,
+                 "streamed vs legacy, same object", fmt=".1f")
+    assert speedup >= 5.0, (
+        f"write_object fast path regressed: {speedup:.1f}x < 5x legacy")
+    bench.record("ckpt_write_object_speedup_ok", True,
+                 "write_object >= 5x legacy (asserted)")
 
 
 def main():
@@ -125,6 +164,9 @@ def main():
                        crash={5: "before_commit"})
         bench.record("ckpt_recoveries", len(r2.recoveries),
                      f"source={','.join(r2.recoveries)}")
+
+        # -- streamed vs legacy write_object fast path -------------------
+        bench_write_object_fast_path(bench, tmp)
     finally:
         shutil.rmtree(tmp, ignore_errors=True)
     bench.write()

@@ -73,6 +73,9 @@ def bench_contended_commits(bench, tmp: str, *, writers=4, per_writer=40):
                  "asserted", key="cluster_commit_rate_contended", fmt=".0f")
     bench.record("cluster_commit_contention_ratio", contended / solo,
                  "aggregate vs solo (O_EXCL rescan overhead)", fmt=".2f")
+    bench.record("cluster_commits_total", (1 + writers) * per_writer,
+                 "manifests across both runs; every one present and "
+                 "unique (zero-loss asserted in-bench)", fmt=".0f")
 
 
 def bench_staging_throughput(bench, tmp: str, *, mb=8):
@@ -92,6 +95,57 @@ def bench_staging_throughput(bench, tmp: str, *, mb=8):
     bench.record("cluster_staging_view_mb_s", mb / t_view,
                  "sibling buffer -> recovery view (read + CRC validate)",
                  fmt=".0f")
+    bench.record("cluster_staged_bytes", tree["p"].nbytes,
+                 "bytes per staged copy (deterministic)", fmt=".0f")
+
+
+def bench_streamed_vs_legacy(bench, tmp: str, *, pages=8192, page_kib=1):
+    """The PR-7 fast-path gate: stage + view throughput of the streamed
+    spill format vs the PR-6 ``np.savez`` path on the SAME fine-grained
+    workload (a paged KV partition — thousands of ~KiB leaves, where the
+    legacy per-zip-member and double-CRC overheads dominate).  Asserted
+    as a RATIO, not wall-clock, so the gate is runner-independent."""
+    tree = {f"page{i}": np.random.default_rng(i).integers(
+                0, 255, (page_kib * 1024,), dtype=np.uint8).astype(np.uint8)
+            for i in range(pages)}
+    mb = pages * page_kib / 1024
+
+    def run(area):
+        area.proxy(1).staging["w0/kv"] = (1, tree)      # warm (dirs, arena)
+        stage = view = float("inf")
+        for tag in (2, 3):
+            t0 = time.perf_counter()
+            area.proxy(1).staging["w0/kv"] = (tag, tree)
+            stage = min(stage, time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            got = area.view(1, {"w0/kv": tree})
+            view = min(view, time.perf_counter() - t0)
+        assert got.staging["w0/kv"][0] == 3
+        return stage, view
+
+    s_stage, s_view = run(FileStagingArea(os.path.join(tmp, "fast")))
+    l_stage, l_view = run(FileStagingArea(os.path.join(tmp, "slow"),
+                                          legacy_format=True))
+    stage_x, view_x = l_stage / s_stage, l_view / s_view
+    note = f"{pages} x {page_kib} KiB pages ({mb:.0f} MiB)"
+    bench.record("cluster_stream_stage_mb_s", mb / s_stage,
+                 f"streamed spill, {note}", fmt=".0f")
+    bench.record("cluster_legacy_stage_mb_s", mb / l_stage,
+                 f"legacy np.savez spill, {note}", fmt=".0f")
+    bench.record("cluster_stream_view_mb_s", mb / s_view,
+                 "streamed mmap view read + CRC", fmt=".0f")
+    bench.record("cluster_legacy_view_mb_s", mb / l_view,
+                 "legacy np.load view read + CRC", fmt=".0f")
+    bench.record("cluster_stage_speedup_x", stage_x,
+                 "streamed vs legacy stage, same workload", fmt=".1f")
+    bench.record("cluster_view_speedup_x", view_x,
+                 "streamed vs legacy view, same workload", fmt=".1f")
+    assert stage_x >= 10.0, (
+        f"staging fast path regressed: {stage_x:.1f}x < 10x legacy")
+    assert view_x >= 10.0, (
+        f"view fast path regressed: {view_x:.1f}x < 10x legacy")
+    bench.record("cluster_stream_speedup_ok", True,
+                 "stage AND view >= 10x legacy (asserted)")
 
 
 def bench_cluster_step_rate(bench, tmp: str, *, steps=12, commit_every=3):
@@ -118,6 +172,7 @@ def main():
     try:
         bench_contended_commits(bench, tmp)
         bench_staging_throughput(bench, tmp)
+        bench_streamed_vs_legacy(bench, tmp)
         bench_cluster_step_rate(bench, tmp)
     finally:
         shutil.rmtree(tmp, ignore_errors=True)

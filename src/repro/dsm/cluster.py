@@ -56,6 +56,7 @@ import numpy as np
 
 import jax
 
+from repro.dsm import stream
 from repro.dsm.pool import (DSMPool, _crc_of_arrays, decode_arrays,
                             encode_arrays, manifest_entry)
 
@@ -86,15 +87,20 @@ class MembershipChange(Exception):
         self.victim = victim
 
 
-def _atomic_json(path: str, doc: dict):
-    """Write-fsync-rename, same discipline as every other durable file."""
+def _atomic_json(path: str, doc: dict, *, fsync: bool = True):
+    """Write-fsync-rename, same discipline as every other durable file.
+    ``fsync=False`` keeps only the rename atomicity (readers never see a
+    partial document) and skips the storage flush — correct for files
+    that are VOLATILE by contract, like staging-buffer metas: they only
+    need to survive the writer process, not a host crash."""
     os.makedirs(os.path.dirname(path), exist_ok=True)
     fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path))
     try:
         with os.fdopen(fd, "w") as f:
             json.dump(doc, f)
-            f.flush()
-            os.fsync(f.fileno())
+            if fsync:
+                f.flush()
+                os.fsync(f.fileno())
         os.replace(tmp, path)
     except BaseException:
         try:
@@ -262,10 +268,27 @@ class _StagingBuffer:
     them CAN leave the previous meta next to a new payload — the meta
     therefore carries a CRC of the payload it describes, and ``view``
     discards any pair that does not match (recovery then falls back to
-    the pool, never adopts a mislabeled copy)."""
+    the pool, never adopts a mislabeled copy).
 
-    def __init__(self, path: str):
+    Spills are streamed frames (``repro.dsm.stream``) and are NOT
+    fsync'd: the staging tier is peer host memory, volatile by contract
+    — it must survive the WRITER's crash (the completed writes + renames
+    do, the owner process keeps running) but is expected to vanish with
+    the owner host.  Skipping the two fsyncs of the legacy path is the
+    single biggest win of the staging fast path.  Leaves are
+    materialized (device→host) HERE, per leaf, as the frame streams —
+    ``TierManager.rstore`` no longer pays a whole-tree ``_to_host`` up
+    front (see ``materializes_leaves``)."""
+
+    #: tells ``TierManager.rstore`` it may hand over device-backed trees
+    #: as-is: this buffer copies each leaf to host only as it streams out
+    materializes_leaves = True
+
+    def __init__(self, path: str, arena: Optional[stream.SpillArena] = None,
+                 legacy: bool = False):
         self.path = path
+        self.arena = arena
+        self.legacy = legacy
 
     def __setitem__(self, name: str, value: Tuple[int, Any]):
         tag, tree = value
@@ -273,15 +296,15 @@ class _StagingBuffer:
             os.makedirs(self.path, exist_ok=True)
             leaves = [np.asarray(l)
                       for l in jax.tree_util.tree_leaves(tree)]
-            raw, dtypes, shapes = encode_arrays(leaves)
             base = os.path.join(self.path, _mangle(name))
+            if self.legacy:
+                self._write_legacy(name, base, int(tag), leaves)
+                return
             fd, tmp = tempfile.mkstemp(dir=self.path)
             try:
                 with os.fdopen(fd, "wb") as f:
-                    np.savez(f, **{f"a{i}": a for i, a in enumerate(raw)})
-                    f.flush()
-                    os.fsync(f.fileno())
-                os.replace(tmp, base + ".npz")
+                    crc, _, _ = stream.write_frame(f, leaves, self.arena)
+                os.replace(tmp, base + stream.SUFFIX)
             except BaseException:
                 try:
                     os.unlink(tmp)
@@ -290,14 +313,37 @@ class _StagingBuffer:
                 raise
             _atomic_json(base + ".json",
                          {"name": name, "tag": int(tag), "n": len(leaves),
-                          "crc": _crc_of_arrays(leaves),
-                          "dtypes": dtypes, "shapes": shapes})
+                          "crc": crc, "format": "cxl0"},
+                         fsync=False)
         except FileNotFoundError:
             # the buffer owner crashed and its volatile buffer was wiped
             # out from under this store: an RStore into a dead peer's
             # cache simply does not land — the crash semantics, not an
             # error of ours
             return
+
+    def _write_legacy(self, name: str, base: str, tag: int, leaves):
+        """The PR-6 spill format (``np.savez`` + fsync'd meta): kept so
+        backward-compat tests can fabricate old staging areas and as the
+        in-bench comparison baseline for the streamed path."""
+        raw, dtypes, shapes = encode_arrays(leaves)
+        fd, tmp = tempfile.mkstemp(dir=self.path)
+        try:
+            with os.fdopen(fd, "wb") as f:
+                np.savez(f, **{f"a{i}": a for i, a in enumerate(raw)})
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, base + ".npz")
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+        _atomic_json(base + ".json",
+                     {"name": name, "tag": tag, "n": len(leaves),
+                      "crc": _crc_of_arrays(leaves),
+                      "dtypes": dtypes, "shapes": shapes})
 
 
 @dataclasses.dataclass
@@ -324,16 +370,29 @@ class FileStagingArea:
     the copies OF worker *i* living in a sibling's buffer survive.
     """
 
-    def __init__(self, root: str):
+    def __init__(self, root: str, *, legacy_format: bool = False):
         self.root = root
+        self.legacy_format = legacy_format
+        self._arena = stream.SpillArena()
         os.makedirs(root, exist_ok=True)
 
     def area(self, rank: int) -> str:
         return os.path.join(self.root, f"w{rank}")
 
+    def payload_path(self, rank: int, name: str) -> str:
+        """Path of ``name``'s spill payload in ``rank``'s buffer — the
+        streamed frame if present, else the legacy ``.npz``."""
+        base = os.path.join(self.area(rank), _mangle(name))
+        if os.path.exists(base + stream.SUFFIX):
+            return base + stream.SUFFIX
+        if os.path.exists(base + ".npz"):
+            return base + ".npz"
+        return base + stream.SUFFIX
+
     def proxy(self, rank: int) -> StagingProxy:
         """Write INTO ``rank``'s buffer (the rstore/replicate_to target)."""
-        return StagingProxy(_StagingBuffer(self.area(rank)))
+        return StagingProxy(_StagingBuffer(self.area(rank), self._arena,
+                                           legacy=self.legacy_format))
 
     def view(self, rank: int, templates: Dict[str, Any]) -> StagedView:
         """Read ``rank``'s OWN buffer: the staged copies this worker holds
@@ -347,16 +406,28 @@ class FileStagingArea:
             meta = _read_json(base + ".json")
             if meta is None:
                 continue
-            try:
-                with np.load(base + ".npz") as z:
-                    arrays = [z[f"a{i}"] for i in range(meta["n"])]
-                arrays = decode_arrays(arrays, meta["dtypes"],
-                                       meta["shapes"])
-            except Exception:
-                continue            # torn spill: not a usable copy
-            if _crc_of_arrays(arrays) != meta.get("crc"):
-                continue    # writer died between payload and meta renames:
-                #             this meta describes a DIFFERENT payload
+            if meta.get("format") == "cxl0":
+                # streamed frame: mmap-backed zero-copy read; the frame's
+                # own footer CRC is folded during the read and must also
+                # match the meta's CRC (a writer that died between the
+                # payload and meta renames leaves a meta describing a
+                # DIFFERENT payload)
+                try:
+                    arrays, crc, hdr = stream.read_frame(base + stream.SUFFIX)
+                except (stream.FrameError, OSError):
+                    continue        # torn spill: not a usable copy
+                if crc != meta.get("crc") or len(arrays) != meta.get("n"):
+                    continue
+            else:
+                try:
+                    with np.load(base + ".npz") as z:
+                        arrays = [z[f"a{i}"] for i in range(meta["n"])]
+                    arrays = decode_arrays(arrays, meta["dtypes"],
+                                           meta["shapes"])
+                except Exception:
+                    continue        # torn spill: not a usable copy
+                if _crc_of_arrays(arrays) != meta.get("crc"):
+                    continue  # meta/payload mismatch — see above
             _, treedef = jax.tree_util.tree_flatten(template)
             staged[name] = (meta["tag"],
                             jax.tree_util.tree_unflatten(treedef, arrays))

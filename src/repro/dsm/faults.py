@@ -41,8 +41,9 @@ import threading
 import zlib
 from typing import Any, Dict, List, Optional, Tuple
 
+from repro.dsm import stream
 from repro.dsm.flit_runtime import KILL_POINTS
-from repro.dsm.pool import DSMPool, PoolObject
+from repro.dsm.pool import DSMPool
 from repro.dsm.recovery import CrashError
 
 #: the primitive vocabulary a kill can target (async/sharded flush
@@ -193,10 +194,17 @@ class FaultSchedule:
 # ---------------------------------------------------------------------------
 
 def _payload_span(path: str) -> Tuple[int, int]:
-    """(offset, length) of the largest zip member's DATA bytes — the region
+    """(offset, length) of the largest member's DATA bytes — the region
     the content CRC provably covers.  Corrupting here guarantees the read
-    path must reject the file (a flip in e.g. a central-directory timestamp
-    could otherwise go unnoticed and desynchronize the fuzzer's oracle)."""
+    path must reject the file (a flip in e.g. a central-directory
+    timestamp could otherwise go unnoticed and desynchronize the fuzzer's
+    oracle).  Sniffs the payload format: streamed ``.cxl0`` frames are
+    targeted via their header's leaf table (the largest leaf's bytes),
+    legacy ``.npz`` payloads via the zip local-file-header walk."""
+    with open(path, "rb") as f:
+        magic = f.read(len(stream.MAGIC))
+    if magic == stream.MAGIC:
+        return stream.payload_span(path)
     import zipfile
     with zipfile.ZipFile(path) as z:
         info = max(z.infolist(), key=lambda i: i.file_size)
@@ -214,12 +222,14 @@ def corrupt_file(path: str, mode: str):
     ``bitflip`` inverts one byte of array data, ``zero`` XOR-smears a
     64-byte window of array data (any nonzero burst under 32 bits — and
     any fixed nonzero XOR pattern — changes a CRC32, so detection is
-    guaranteed, never probabilistic).  The CRC / zip-structure validation
-    of the read path must reject all three."""
+    guaranteed, never probabilistic).  The CRC / structure validation of
+    the read path must reject all three for BOTH payload formats."""
     size = os.path.getsize(path)
     if mode == "truncate":
-        # the zip central directory lives at the tail: a prefix can never
-        # parse as a complete archive
+        # legacy zip: the central directory lives at the tail — a prefix
+        # can never parse as a complete archive.  Streamed frame: the
+        # size equation (header + payload + footer == file size) fails
+        # and the footer magic is gone
         os.truncate(path, max(1, size // 3))
         return
     off, length = _payload_span(path)
@@ -245,13 +255,19 @@ def corrupt_file(path: str, mode: str):
 
 class FaultyPool(DSMPool):
     """A DSMPool whose durable writes can be torn: after the payload's
-    atomic rename (so the write IS visible), the ``.npz`` is corrupted
-    per the ``TornSpec`` (or a forced per-write override).  The ``.crc``
-    sidecar and the manifest entry keep describing the ORIGINAL bytes —
-    exactly the mislabeled-but-visible state a writer dying mid-update
-    leaves on CXL shared memory.  Every corruption is recorded in
-    ``injected`` so an oracle can compute which commits must be
-    rejected."""
+    atomic rename (so the write IS visible), the payload file is
+    corrupted per the ``TornSpec`` (or a forced per-write override).  The
+    frame footer / ``.crc`` sidecar and the manifest entry keep
+    describing the ORIGINAL bytes — exactly the mislabeled-but-visible
+    state a writer dying mid-update leaves on CXL shared memory.  Every
+    corruption is recorded in ``injected`` so an oracle can compute which
+    commits must be rejected.
+
+    The injection rides ``DSMPool._finalize_write`` (the post-rename
+    hook) rather than a ``write_object`` override: the split-phase
+    pipelined shard writes (``start_write``/``finish``) and the legacy
+    ``.npz`` writer all funnel through that hook, so every durable-write
+    flavor stays corruptible and the fuzzer's oracle stays in sync."""
 
     def __init__(self, path: str, *, torn: Optional[TornSpec] = None,
                  injected: Optional[List[Tuple[str, int, str]]] = None):
@@ -272,17 +288,16 @@ class FaultyPool(DSMPool):
         with self._faults_lock:
             self._forced[(name, version)] = mode
 
-    def write_object(self, name: str, version: int, tree) -> PoolObject:
-        obj = super().write_object(name, version, tree)
+    def _finalize_write(self, name: str, version: int, payload_path: str):
+        super()._finalize_write(name, version, payload_path)
         with self._faults_lock:
             mode = self._forced.pop((name, version), None)
         if mode is None and self.torn is not None:
             mode = self.torn.decide(name, version)
         if mode is not None:
-            corrupt_file(self._obj_path(name, version) + ".npz", mode)
+            corrupt_file(payload_path, mode)
             with self._faults_lock:
                 self.injected.append((name, version, mode))
-        return obj
 
 
 # ---------------------------------------------------------------------------

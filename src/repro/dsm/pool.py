@@ -3,21 +3,28 @@
 On-disk layout (one directory per pool, usually on shared storage):
 
     pool/
-      objects/<object>/<version>.npz       # flattened pytree + CRC32 sidecar
-      objects/<object>/<version>.crc
-      objects/<object>.s<k>/<version>.npz  # shard k of a SHARDED write
+      objects/<object>/<version>.cxl0      # streamed, self-validating frame
+      objects/<object>.s<k>/<version>.cxl0 # shard k of a SHARDED write
+      objects/<object>/<version>.npz       # LEGACY payload (+ .crc sidecar)
       manifest.json                        # CURRENT committed versions
       manifest.<n>.json                    # history (GC-bounded)
 
 Write protocol (the MStore/RFlush realization):
-  1. write ``<version>.npz`` to a temp name, fsync;
-  2. write the CRC sidecar, fsync;
-  3. atomically rename both into place.
+  1. stream ``<version>.cxl0`` to a temp name — one pass, folding the
+     CRC32 chunk-by-chunk as the bytes go out (``repro.dsm.stream``);
+  2. fsync, then atomically rename into place.
+The frame is self-validating (header CRC + folded payload CRC in the
+footer), so no sidecar write/fsync is needed — half the fsyncs of the
+legacy ``.npz`` + ``.crc`` pair, which the read path still accepts for
+pools written before the streamed format existed.
 A *commit* (``completeOp``) atomically renames a new ``manifest.json``
 listing every object's version + CRC.  Readers validate CRCs; a torn or
 bit-flipped shard fails validation and recovery falls back to the previous
 manifest — the recovered state is always SOME completed commit (never torn),
-which is exactly durable linearizability of the step history.
+which is exactly durable linearizability of the step history.  Reads are
+mmap-backed and zero-copy: ``read_object`` returns ``np.frombuffer`` views
+into private copy-on-write pages (``read_frame``), never an intermediate
+deserialization buffer.
 
 Multi-writer safety: a pool is a SHARED resource — several worker
 processes (the cluster protocol, ``repro.dsm.cluster``) or a restarted
@@ -57,6 +64,9 @@ from typing import Any, Dict, List, Optional, Tuple
 import numpy as np
 
 import jax
+
+from repro.dsm import stream
+from repro.dsm.stream import SpillArena  # noqa: F401  (re-export)
 
 
 @dataclasses.dataclass
@@ -175,12 +185,64 @@ def decode_arrays(arrays: List[np.ndarray], dtypes: List[str],
             for a, d, shape in zip(arrays, dtypes, shapes)]
 
 
+class PendingWrite:
+    """A streamed-but-not-yet-durable object write.  ``start_write``
+    already pushed the whole frame (CRC folded during the stream) onto a
+    temp file; ``finish`` pays the fsync and performs the atomic rename.
+    Splitting the two lets the sharded flush pipelines stream shard k+1's
+    bytes while shard k sits in its fsync — serialize/write and fsync
+    overlap instead of queueing (``TierManager._shard_submit``)."""
+
+    __slots__ = ("_pool", "name", "version", "crc", "nbytes",
+                 "_file", "_tmp", "_dst")
+
+    def __init__(self, pool: "DSMPool", name: str, version: int,
+                 crc: int, nbytes: int, file, tmp: str, dst: str):
+        self._pool = pool
+        self.name = name
+        self.version = version
+        self.crc = crc
+        self.nbytes = nbytes
+        self._file = file
+        self._tmp = tmp
+        self._dst = dst
+
+    def finish(self) -> PoolObject:
+        """Make the write durable (fsync) and visible (atomic rename).
+        MStore semantics: returns only once the object is on storage."""
+        f, self._file = self._file, None
+        try:
+            f.flush()
+            os.fsync(f.fileno())
+        finally:
+            f.close()
+        os.replace(self._tmp, self._dst)
+        self._pool._finalize_write(self.name, self.version, self._dst)
+        return PoolObject(self.name, self.version, self.crc, self.nbytes)
+
+    def abort(self):
+        """Drop an unfinished write (nothing became visible)."""
+        if self._file is not None:
+            try:
+                self._file.close()
+            finally:
+                self._file = None
+        try:
+            os.unlink(self._tmp)
+        except OSError:
+            pass
+
+
 class DSMPool:
     def __init__(self, path: str):
         self.path = path
         self.obj_dir = os.path.join(path, "objects")
         os.makedirs(self.obj_dir, exist_ok=True)
         self._manifest_seq = self._latest_manifest_seq()
+        #: reusable spill-buffer arena of this pool's streamed writes
+        #: (per-thread slots inside; sharded pipelines pass their
+        #: TierManager's own arena via ``start_write(..., arena=)``)
+        self._arena = stream.SpillArena()
 
     # -- low-level object IO -------------------------------------------------
     def _obj_path(self, name: str, version: int) -> str:
@@ -188,19 +250,80 @@ class DSMPool:
         os.makedirs(d, exist_ok=True)
         return os.path.join(d, f"{version:08d}")
 
-    def write_object(self, name: str, version: int, tree) -> PoolObject:
-        """Durable write of one object version (MStore semantics: complete
-        only once on physical storage)."""
-        arrays, treedef = _flatten(tree)
-        crc = _crc_of_arrays(arrays)
+    def payload_path(self, name: str, version: int) -> str:
+        """The on-disk payload file of ``(name, version)`` — streamed
+        ``.cxl0`` if present, else the legacy ``.npz`` (tests and the
+        fault layer corrupt payloads through this)."""
         base = self._obj_path(name, version)
+        if os.path.exists(base + stream.SUFFIX):
+            return base + stream.SUFFIX
+        if os.path.exists(base + ".npz"):
+            return base + ".npz"
+        return base + stream.SUFFIX
+
+    def _mkstemp(self, base: str) -> Tuple[int, str]:
         try:
-            tmp_fd, tmp_name = tempfile.mkstemp(dir=os.path.dirname(base))
+            return tempfile.mkstemp(dir=os.path.dirname(base))
         except FileNotFoundError:
             # a concurrent gc() rmdir'd the (momentarily empty) object dir
             # between our makedirs and mkstemp — recreate and retry once
             os.makedirs(os.path.dirname(base), exist_ok=True)
-            tmp_fd, tmp_name = tempfile.mkstemp(dir=os.path.dirname(base))
+            return tempfile.mkstemp(dir=os.path.dirname(base))
+
+    def start_write(self, name: str, version: int, tree,
+                    arena: Optional[stream.SpillArena] = None
+                    ) -> PendingWrite:
+        """Stream one object version onto a temp file — the CPU half of a
+        durable write (serialize + write + incremental CRC, single pass,
+        no fsync).  Durability and visibility happen in the returned
+        handle's ``finish()``."""
+        arrays, _ = _flatten(tree)
+        base = self._obj_path(name, version)
+        tmp_fd, tmp_name = self._mkstemp(base)
+        f = os.fdopen(tmp_fd, "wb")
+        try:
+            crc, nbytes, _ = stream.write_frame(
+                f, arrays, arena or self._arena)
+        except BaseException:
+            f.close()
+            try:
+                os.unlink(tmp_name)
+            except OSError:
+                pass
+            raise
+        return PendingWrite(self, name, version, crc, nbytes, f,
+                            tmp_name, base + stream.SUFFIX)
+
+    def write_object(self, name: str, version: int, tree) -> PoolObject:
+        """Durable write of one object version (MStore semantics: complete
+        only once on physical storage).  One pass over the data: each
+        leaf's buffer is streamed via memoryview in CHUNK-sized slices
+        with the CRC32 folded as it goes — no ``np.savez`` zip walk, no
+        second ``tobytes()`` CRC pass, no sidecar fsync."""
+        pending = self.start_write(name, version, tree)
+        try:
+            return pending.finish()
+        except BaseException:
+            pending.abort()
+            raise
+
+    def _finalize_write(self, name: str, version: int, payload_path: str):
+        """Hook: runs after a payload's atomic rename made it visible, in
+        BOTH the one-shot and split-phase write paths.  The fault layer
+        (``FaultyPool``) tears payloads here — keeping the injection on
+        this hook rather than on ``write_object`` means pipelined shard
+        writes stay corruptible and the fuzzer's oracle stays in sync."""
+
+    def write_object_legacy(self, name: str, version: int,
+                            tree) -> PoolObject:
+        """The PR-6 write path: ``np.savez`` payload + JSON ``.crc``
+        sidecar, two fsyncs, three passes over the data.  Kept (a) so
+        backward-compat tests can fabricate old pools and (b) as the
+        in-bench comparison baseline for the streamed fast path."""
+        arrays, treedef = _flatten(tree)
+        crc = _crc_of_arrays(arrays)
+        base = self._obj_path(name, version)
+        tmp_fd, tmp_name = self._mkstemp(base)
         os.close(tmp_fd)
         raw, dtypes, shapes = encode_arrays(arrays)
         with open(tmp_name, "wb") as f:
@@ -216,6 +339,7 @@ class DSMPool:
             os.fsync(f.fileno())
         os.replace(base + ".crc.tmp", base + ".crc")
         nbytes = sum(a.nbytes for a in arrays)
+        self._finalize_write(name, version, base + ".npz")
         return PoolObject(name, version, crc, nbytes)
 
     def max_version(self, name: str) -> int:
@@ -249,9 +373,25 @@ class DSMPool:
         """Read + CRC-validate one object version; raises CorruptObjectError
         on mismatch (recovery then falls back to an older manifest).
         ``expected_crc`` (the MANIFEST-recorded crc) additionally guards
-        against the file+sidecar pair having been atomically replaced by a
-        different write since the manifest committed."""
+        against the payload having been atomically replaced by a
+        different write since the manifest committed.
+
+        Streamed objects are mmap'd and returned as zero-copy
+        ``np.frombuffer`` views (private copy-on-write pages); the CRC
+        fold is one pass over the page cache.  Legacy ``.npz`` + sidecar
+        pairs written by older pools take the original decode path."""
         base = self._obj_path(name, version)
+        if os.path.exists(base + stream.SUFFIX):
+            try:
+                arrays, crc, _ = stream.read_frame(base + stream.SUFFIX)
+            except (stream.FrameError, OSError) as e:
+                raise CorruptObjectError(f"{name}@{version}: {e}") from e
+            if expected_crc is not None and crc != expected_crc:
+                raise CorruptObjectError(
+                    f"{name}@{version}: content does not match the "
+                    f"manifest (overwritten by a later write?)")
+            _, treedef = jax.tree_util.tree_flatten(treedef_like)
+            return jax.tree_util.tree_unflatten(treedef, arrays)
         try:
             with open(base + ".crc") as f:
                 meta = json.load(f)
@@ -310,7 +450,13 @@ class DSMPool:
         written to a temp file, fsync'd, and atomically renamed OVER the
         reservation.  Readers either see the empty reservation (skipped as
         unparseable) or the complete document — a concurrent or restarted
-        committer can never clobber a completed commit."""
+        committer can never clobber a completed commit.
+
+        The document is serialized and fsync'd ONCE: the convenience head
+        pointer (``manifest.json``) is a hardlink to the same already-
+        durable inode, atomically renamed into place — half the fsyncs of
+        writing the document twice.  On filesystems without hardlinks the
+        head falls back to a second write."""
         seq, dst = self._reserve_manifest_seq()
         self._manifest_seq = seq
         doc = {
@@ -325,16 +471,24 @@ class DSMPool:
             json.dump(doc, f)
             f.flush()
             os.fsync(f.fileno())
+        # link the head's temp name to the fsync'd inode BEFORE the rename
+        # consumes ``tmp`` — no second serialize, no second fsync
+        head = os.path.join(self.path, "manifest.json")
+        tmp2 = os.path.join(self.path, f".manifest.head.tmp.{seq}")
+        try:
+            os.link(tmp, tmp2)
+        except OSError:
+            tmp2 = None                 # no hardlinks here: write it twice
         os.replace(tmp, dst)
         # update the convenience head pointer last (also atomic; with
         # concurrent committers last-writer-wins — readers that need the
         # true newest manifest use manifests_desc())
-        head = os.path.join(self.path, "manifest.json")
-        tmp2 = os.path.join(self.path, f".manifest.head.tmp.{seq}")
-        with open(tmp2, "w") as f:
-            json.dump(doc, f)
-            f.flush()
-            os.fsync(f.fileno())
+        if tmp2 is None:
+            tmp2 = os.path.join(self.path, f".manifest.head.tmp.{seq}")
+            with open(tmp2, "w") as f:
+                json.dump(doc, f)
+                f.flush()
+                os.fsync(f.fileno())
         os.replace(tmp2, head)
         return seq
 

@@ -14,6 +14,11 @@ workers are uninterrupted.  Recovery sources, best first:
    if EVERY shard validates, so a commit torn mid-shard-write is invisible.
 
 ``RecoveryManager.recover`` returns (state_objects, step, source).
+
+Reads go through ``DSMPool.read_entry``, so recovery gets the streamed
+format's mmap-backed zero-copy loads for free — and still reads legacy
+``.npz`` objects written by older incarnations (the pool sniffs the
+payload per object), so a fleet can recover across the format change.
 """
 from __future__ import annotations
 

@@ -1,0 +1,307 @@
+"""Zero-copy streaming frame I/O — the pool/staging data-path fast path.
+
+The PR-6 write path serialized a pytree three times: ``np.savez`` walked
+every leaf through Python's zipfile (one CRC pass + one copy per member),
+``_crc_of_arrays`` made a SECOND full pass over ``tobytes()`` copies, and
+every commit allocated fresh buffers.  This module replaces all of that
+with a single-pass framed-binary protocol:
+
+* each leaf's buffer is streamed via ``memoryview`` (no ``tobytes()``
+  copy) in fixed-size ``CHUNK`` slices, folding ``zlib.crc32``
+  incrementally as the bytes go out — one pass over the data;
+* leaves smaller than ``PACK_LIMIT`` are coalesced into a reusable
+  ``SpillArena`` buffer so a fine-grained pytree (a paged KV cache, an
+  embedding table's row shards) costs a handful of large writes instead
+  of thousands of tiny syscalls;
+* the reader ``mmap``s the frame (``ACCESS_COPY``: private copy-on-write
+  pages) and returns ``np.frombuffer`` views directly into the page
+  cache — zero-copy loads, validated by the same incremental CRC fold.
+
+Frame layout (all integers little-endian)::
+
+    0            MAGIC        b"CXL0FR1\\n"                     8 bytes
+    8            header_len   u32
+    12           header_crc   u32  (zlib.crc32 of the header JSON)
+    16           header JSON  {"n": N, "dtypes": [...],
+                               "shapes": [[...]], "nbytes": [...]}
+    hdr_end      payload      every leaf's raw C-order bytes, tightly
+                              concatenated (offsets = running sums)
+    hdr_end+P    FOOTER       b"CXL0END\\n"                     8 bytes
+    +8           payload_crc  u32  (zlib.crc32 folded over the payload)
+    +12          payload_len  u64
+    total file size == hdr_end + P + 20
+
+``payload_crc`` is ``zlib.crc32`` folded over each leaf's raw contiguous
+bytes in order — by construction the SAME value as the legacy
+``pool._crc_of_arrays``, so manifests, staging metas and fault oracles
+written against either format validate against the other.
+
+Torn-write detection (the crash-consistency contract this frame must
+uphold — see ``repro.dsm.faults``):
+
+* ``truncate``  — the total-size equation fails (and the footer magic is
+  gone): structural reject before any data is read;
+* ``bitflip``   — a sub-32-bit burst in the payload: CRC32 detection is
+  guaranteed, never probabilistic;
+* ``zero``      — a fixed nonzero XOR smear of array data: the folded
+  CRC changes (same guarantee the legacy format relied on);
+* header damage — ``header_crc`` / JSON parse / size-equation reject, so
+  a flipped dtype token can never silently re-type the data.
+"""
+from __future__ import annotations
+
+import json
+import mmap
+import os
+import struct
+import threading
+import zlib
+from typing import Any, BinaryIO, Dict, List, Optional, Tuple
+
+import numpy as np
+
+MAGIC = b"CXL0FR1\n"
+FOOTER = b"CXL0END\n"
+#: payload suffix of streamed pool objects / staging spills (the legacy
+#: ``.npz`` + ``.crc`` sidecar pair remains readable for old pools)
+SUFFIX = ".cxl0"
+#: CRC/write granularity for large leaves: big enough that zlib.crc32's
+#: per-call overhead vanishes, small enough to keep the fold incremental
+CHUNK = 1 << 20
+#: leaves below this are coalesced into the arena before hitting the file
+PACK_LIMIT = 256 << 10
+_FOOTER_LEN = len(FOOTER) + 4 + 8        # magic + u32 crc + u64 payload_len
+_HDR_FIXED = len(MAGIC) + 4 + 4          # magic + u32 len + u32 crc
+
+
+class FrameError(Exception):
+    """Any structural or CRC validation failure of a frame — the caller
+    (pool read path, staging view) treats it exactly like a torn write."""
+
+
+class SpillArena:
+    """Reusable spill-buffer arena: one geometrically-grown scratch buffer
+    per thread, checked out by the frame writer to coalesce small leaves
+    (and to compact the rare non-contiguous one) instead of allocating
+    per commit.  Thread-safety is by construction — each worker thread of
+    a sharded flush pipeline gets its own slot via ``threading.local``."""
+
+    #: floor for the first checkout; grown geometrically after that
+    MIN_BYTES = 1 << 20
+
+    def __init__(self):
+        self._local = threading.local()
+        self.allocations = 0         # observability (tests assert reuse)
+
+    def checkout(self, nbytes: int) -> memoryview:
+        """A writable scratch buffer of at least ``nbytes`` — the SAME
+        underlying buffer on every call from one thread unless it had to
+        grow."""
+        buf = getattr(self._local, "buf", None)
+        if buf is None or len(buf) < nbytes:
+            size = max(self.MIN_BYTES,
+                       len(buf) * 2 if buf is not None else 0, nbytes)
+            buf = bytearray(size)
+            self._local.buf = buf
+            self.allocations += 1
+        return memoryview(buf)
+
+
+#: process-wide fallback arena for callers that do not carry their own
+_DEFAULT_ARENA = SpillArena()
+
+
+def _leaf_view(a: np.ndarray) -> memoryview:
+    """The raw bytes of ``a`` as a memoryview WITHOUT copying when the
+    array is already C-contiguous (the overwhelmingly common case: host
+    snapshots of training state / KV pages).  Non-contiguous leaves are
+    compacted first — the one copy the format cannot avoid; dtypes the
+    buffer protocol refuses (bfloat16 et al.) go out as uint8 views."""
+    if not a.flags.c_contiguous:
+        a = np.ascontiguousarray(a)
+    if not a.ndim or not a.size:
+        # 0-d and empty arrays can't be view-cast; tobytes() of ≤ itemsize
+        # bytes is not a copy worth avoiding
+        return memoryview(a.tobytes())
+    try:
+        return memoryview(a).cast("B")
+    except (TypeError, ValueError, BufferError):
+        return memoryview(a.view(np.uint8)).cast("B")
+
+
+def frame_header(leaves: List[np.ndarray]) -> Dict[str, Any]:
+    """One pass, with the dtype-token stringification memoized: a paged
+    KV spill has thousands of same-dtype leaves, and ``str(dtype)`` per
+    leaf was a measurable share of the whole write at 2 KiB pages."""
+    dtypes: List[str] = []
+    shapes: List[List[int]] = []
+    nbytes: List[int] = []
+    memo: Dict[Any, str] = {}
+    for a in leaves:
+        dt = a.dtype
+        tok = memo.get(dt)
+        if tok is None:
+            tok = memo[dt] = str(dt)
+        dtypes.append(tok)
+        shapes.append(list(a.shape))
+        nbytes.append(a.nbytes)
+    return {"n": len(leaves), "dtypes": dtypes,
+            "shapes": shapes, "nbytes": nbytes}
+
+
+def write_frame(f: BinaryIO, leaves: List[np.ndarray],
+                arena: Optional[SpillArena] = None
+                ) -> Tuple[int, int, Dict[str, Any]]:
+    """Stream ``leaves`` into ``f`` as one frame; single pass, CRC folded
+    chunk-by-chunk as the bytes are written.  Returns
+    ``(payload_crc, payload_nbytes, header)``.  The caller owns fsync /
+    rename — staging (volatile by contract) skips the fsync entirely,
+    the pool does not."""
+    arena = arena or _DEFAULT_ARENA
+    header = frame_header(leaves)
+    hdr = json.dumps(header, separators=(",", ":")).encode()
+    f.write(MAGIC)
+    f.write(struct.pack("<II", len(hdr), zlib.crc32(hdr)))
+    f.write(hdr)
+    crc = 0
+    total = 0
+    pack = arena.checkout(max(PACK_LIMIT * 2, CHUNK))
+    pack_cap = len(pack) - PACK_LIMIT
+    pos = 0
+    for a in leaves:
+        mv = _leaf_view(a)
+        n = len(mv)
+        total += n
+        if n >= PACK_LIMIT:
+            if pos:                             # flush the packed run
+                crc = _fold(pack, pos, crc)
+                f.write(pack[:pos])
+                pos = 0
+            for lo in range(0, n, CHUNK):
+                part = mv[lo:lo + CHUNK]
+                crc = zlib.crc32(part, crc)
+                f.write(part)
+        else:
+            pack[pos:pos + n] = mv
+            pos += n
+            if pos >= pack_cap:
+                crc = _fold(pack, pos, crc)
+                f.write(pack[:pos])
+                pos = 0
+    if pos:
+        crc = _fold(pack, pos, crc)
+        f.write(pack[:pos])
+    f.write(FOOTER)
+    f.write(struct.pack("<IQ", crc, total))
+    return crc, total, header
+
+
+def _fold(mv: memoryview, end: int, crc: int) -> int:
+    """Fold ``mv[:end]`` into ``crc`` in CHUNK slices.  CRC32 of a
+    concatenation equals the fold of its pieces, so batching small packed
+    leaves into spans changes nothing about the resulting checksum."""
+    for lo in range(0, end, CHUNK):
+        crc = zlib.crc32(mv[lo:min(lo + CHUNK, end)], crc)
+    return crc
+
+
+def _resolve_dtype(token: str) -> np.dtype:
+    try:
+        return np.dtype(token)
+    except TypeError:
+        import ml_dtypes  # noqa: F401  (registers bfloat16, float8, ...)
+        return np.dtype(token)
+
+
+def read_header(path: str) -> Tuple[Dict[str, Any], int, int]:
+    """Parse + validate ONLY the frame header of ``path``.  Returns
+    ``(header, payload_offset, file_size)``.  Raises FrameError on any
+    structural damage."""
+    try:
+        size = os.path.getsize(path)
+        with open(path, "rb") as f:
+            fixed = f.read(_HDR_FIXED)
+            if len(fixed) != _HDR_FIXED or fixed[:len(MAGIC)] != MAGIC:
+                raise FrameError(f"{path}: bad frame magic")
+            hdr_len, hdr_crc = struct.unpack_from("<II", fixed, len(MAGIC))
+            if _HDR_FIXED + hdr_len + _FOOTER_LEN > size:
+                raise FrameError(f"{path}: truncated header")
+            hdr = f.read(hdr_len)
+    except OSError as e:
+        raise FrameError(f"{path}: {e}") from e
+    if len(hdr) != hdr_len or zlib.crc32(hdr) != hdr_crc:
+        raise FrameError(f"{path}: header CRC mismatch")
+    try:
+        header = json.loads(hdr)
+        n = header["n"]
+        if not (len(header["dtypes"]) == len(header["shapes"])
+                == len(header["nbytes"]) == n):
+            raise ValueError("inconsistent header arity")
+    except (ValueError, KeyError, TypeError) as e:
+        raise FrameError(f"{path}: unparseable header: {e}") from e
+    return header, _HDR_FIXED + hdr_len, size
+
+
+def read_frame(path: str, expected_crc: Optional[int] = None
+               ) -> Tuple[List[np.ndarray], int, Dict[str, Any]]:
+    """mmap-backed zero-copy read of one frame: validate structure +
+    folded CRC (one pass over the page cache, no intermediate copies),
+    then return ``np.frombuffer`` views into the mapping plus
+    ``(payload_crc, header)``.  ``ACCESS_COPY`` makes the views private
+    copy-on-write — callers may mutate them without touching the file.
+    Raises FrameError on ANY mismatch, including ``expected_crc`` (the
+    manifest/meta-recorded value) when given."""
+    header, payload_off, size = read_header(path)
+    payload = sum(header["nbytes"])
+    if payload_off + payload + _FOOTER_LEN != size:
+        raise FrameError(f"{path}: size mismatch (torn write?)")
+    try:
+        with open(path, "rb") as f:
+            mm = mmap.mmap(f.fileno(), 0, access=mmap.ACCESS_COPY)
+    except (OSError, ValueError) as e:
+        raise FrameError(f"{path}: {e}") from e
+    foot_off = payload_off + payload
+    if mm[foot_off:foot_off + len(FOOTER)] != FOOTER:
+        raise FrameError(f"{path}: bad footer magic")
+    crc_stored, len_stored = struct.unpack_from(
+        "<IQ", mm, foot_off + len(FOOTER))
+    if len_stored != payload:
+        raise FrameError(f"{path}: footer/header payload length mismatch")
+    crc = 0
+    with memoryview(mm) as view:
+        for lo in range(payload_off, foot_off, CHUNK):
+            crc = zlib.crc32(view[lo:min(lo + CHUNK, foot_off)], crc)
+    if crc != crc_stored:
+        raise FrameError(f"{path}: payload CRC mismatch")
+    if expected_crc is not None and crc != expected_crc:
+        raise FrameError(
+            f"{path}: content does not match the recorded CRC "
+            f"(overwritten by a later write?)")
+    arrays: List[np.ndarray] = []
+    off = payload_off
+    try:
+        for tok, shape, nb in zip(header["dtypes"], header["shapes"],
+                                  header["nbytes"]):
+            dt = _resolve_dtype(tok)
+            count = nb // dt.itemsize if dt.itemsize else 0
+            a = np.frombuffer(mm, dtype=dt, count=count,
+                              offset=off).reshape(shape)
+            arrays.append(a)
+            off += nb
+    except (TypeError, ValueError) as e:
+        raise FrameError(f"{path}: undecodable leaf: {e}") from e
+    return arrays, crc, header
+
+
+def payload_span(path: str) -> Tuple[int, int]:
+    """(offset, length) of the LARGEST leaf's data bytes inside the frame
+    — the region the folded CRC provably covers.  The fault layer
+    corrupts here so the read path must reject the file (mirrors the
+    zip-member targeting of the legacy format)."""
+    header, payload_off, _ = read_header(path)
+    best_off, best_len, off = payload_off, 0, payload_off
+    for nb in header["nbytes"]:
+        if nb > best_len:
+            best_off, best_len = off, nb
+        off += nb
+    return best_off, best_len

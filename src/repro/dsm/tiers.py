@@ -18,10 +18,15 @@ commit barrier (``DurableCommitter``) joins it before completeOp.
 Sharded variants (``rflush_sharded`` / ``flush_async_sharded``) partition
 the object's flattened leaves into byte-balanced shards and run one
 LStore/RFlush pipeline per shard on a thread pool — the write path of the
-sharded / sharded-async commit schedules.  ``flush_wait`` joins either
-flavor; ``abort_flushes`` joins-and-discards every outstanding write (used
-on crash recovery so a stale in-flight write can never land AFTER a new
-incarnation started reusing version numbers).
+sharded / sharded-async commit schedules.  When the pool's write path is
+un-overridden the shard writes are SPLIT-PHASE (``DSMPool.start_write`` →
+``PendingWrite.finish``): serialization/CRC of shard k+1 streams on the
+flush pool while shard k's fsync runs on a dedicated one-thread fsync
+lane — fsync releases the GIL, so the overlap is real even on one CPU.
+``flush_wait`` joins either flavor; ``abort_flushes`` joins-and-discards
+every outstanding write (used on crash recovery so a stale in-flight
+write can never land AFTER a new incarnation started reusing version
+numbers).
 """
 from __future__ import annotations
 
@@ -32,6 +37,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
+from repro.dsm import stream
 from repro.dsm.pool import (DSMPool, PoolObject, ShardedObject,
                             partition_leaves)
 
@@ -64,6 +70,8 @@ class TierManager:
         self._sharded_futures: Dict[
             str, Tuple[int, int, List[List[int]], List[Future]]] = {}
         self._executor: Optional[ThreadPoolExecutor] = None
+        self._fsync_lane: Optional[ThreadPoolExecutor] = None
+        self._arena = stream.SpillArena()   # reusable spill pack buffers
         self._lock = threading.Lock()
 
     def _get_executor(self, n_workers: int) -> ThreadPoolExecutor:
@@ -74,6 +82,32 @@ class TierManager:
                 max_workers=max(1, n_workers),
                 thread_name_prefix=f"rflush-w{self.worker_id}")
         return self._executor
+
+    def _get_fsync_lane(self) -> ThreadPoolExecutor:
+        """One-thread executor that only runs ``PendingWrite.finish``
+        (fsync + rename).  Serializing all fsyncs onto one lane lets the
+        flush pool keep serializing/CRC-ing the NEXT shard while the
+        current one flushes — fsync releases the GIL, so the pipeline
+        genuinely overlaps even on a single CPU."""
+        with self._lock:
+            if self._fsync_lane is None:
+                self._fsync_lane = ThreadPoolExecutor(
+                    max_workers=1,
+                    thread_name_prefix=f"fsync-w{self.worker_id}")
+            return self._fsync_lane
+
+    def _pool_write_is_stock(self) -> bool:
+        """True iff the pool's write path is the stock ``DSMPool`` one —
+        neither subclass-overridden nor instance-monkeypatched.  Fault
+        harnesses and tests replace ``write_object`` wholesale (often
+        with plain 3-positional-arg callables); the sharded pipeline must
+        route through THAT override rather than the split-phase fast
+        path, or the injection/assertion would be silently bypassed."""
+        pool = self.pool
+        return (type(pool).write_object is DSMPool.write_object
+                and "write_object" not in pool.__dict__
+                and type(pool).start_write is DSMPool.start_write
+                and "start_write" not in pool.__dict__)
 
     # -- CXL0 primitive realizations ----------------------------------------
     def lstore(self, name: str, tree: Any):
@@ -98,9 +132,21 @@ class TierManager:
         manifests during recovery.  ``peer`` is anything exposing a
         ``.staging`` mapping: an in-process TierManager, or a
         cross-process ``StagingProxy`` (repro.dsm.cluster) that writes
-        through to a sibling worker's spill-file buffer."""
+        through to a sibling worker's spill-file buffer.
+
+        The D2H copy is DEFERRED when the peer's buffer declares
+        ``materializes_leaves`` (the spill-file buffer copies each leaf
+        to host as it streams the frame): emulator-priced paths already
+        charge the transfer from leaf ``nbytes`` at call time, so a
+        placement policy can reject the spill without this method ever
+        having paid the copy it would have skipped.  In-process dict
+        peers still get an eager host snapshot — their staging entries
+        are read back directly (recovery oracle, rload)."""
+        tree = self.hbm[name]
+        if not getattr(peer.staging, "materializes_leaves", False):
+            tree = _to_host(tree)
         peer.staging[name] = (self.versions.get(name, 0) if tag is None
-                              else tag, _to_host(self.hbm[name]))
+                              else tag, tree)
 
     def ldiscard(self, name: str):
         """Drop an object from the volatile HBM tier (slot freed — e.g. a
@@ -145,11 +191,17 @@ class TierManager:
                   jax.tree_util.tree_leaves(self.hbm[name])]
         assignment = partition_leaves([a.nbytes for a in leaves], n_shards)
         ex = self._get_executor(len(assignment))
+        pipelined = self._pool_write_is_stock()
         futs = []
         try:
             for k, idxs in enumerate(assignment):
-                futs.append(ex.submit(self.pool.write_object, f"{name}.s{k}",
-                                      version, [leaves[i] for i in idxs]))
+                shard = [leaves[i] for i in idxs]
+                if pipelined:
+                    futs.append(self._submit_split_phase(
+                        ex, f"{name}.s{k}", version, shard))
+                else:
+                    futs.append(ex.submit(self.pool.write_object,
+                                          f"{name}.s{k}", version, shard))
                 if k == 0 and post_first_shard is not None:
                     futs[0].result()
                     post_first_shard()
@@ -165,6 +217,42 @@ class TierManager:
                     pass
             raise
         return version, len(leaves), assignment, futs
+
+    def _submit_split_phase(self, ex: ThreadPoolExecutor, name: str,
+                            version: int, leaves: List[np.ndarray]) -> Future:
+        """Submit one shard write as a two-stage pipeline: the flush pool
+        thread serializes + CRCs the frame (``start_write``, no fsync),
+        then hands the pending write to the one-thread fsync lane for
+        ``finish`` (fsync + atomic rename).  The returned future resolves
+        only after the rename — same durability point as a monolithic
+        ``write_object`` — but while shard k sits in its fsync, the flush
+        pool is already streaming shard k+1's bytes."""
+        out: Future = Future()
+
+        def serialize():
+            try:
+                pending = self.pool.start_write(name, version, leaves,
+                                                arena=self._arena)
+            except BaseException as e:
+                out.set_exception(e)
+                return
+            def finish():
+                try:
+                    out.set_result(pending.finish())
+                except BaseException as e:
+                    try:
+                        pending.abort()
+                    except Exception:
+                        pass
+                    out.set_exception(e)
+            try:
+                self._get_fsync_lane().submit(finish)
+            except BaseException as e:     # lane torn down mid-shutdown
+                pending.abort()
+                out.set_exception(e)
+
+        ex.submit(serialize)
+        return out
 
     def _shard_join(self, name: str, version: int, n_leaves: int,
                     assignment: List[List[int]],
@@ -283,11 +371,15 @@ class TierManager:
             self._flush_errors.clear()
 
     def close(self):
-        """Release the flush thread pool (idempotent; lazily recreated if
-        another sharded flush happens)."""
+        """Release the flush thread pool and fsync lane (idempotent;
+        lazily recreated if another sharded flush happens)."""
         if self._executor is not None:
             self._executor.shutdown(wait=False)
             self._executor = None
+        with self._lock:
+            lane, self._fsync_lane = self._fsync_lane, None
+        if lane is not None:
+            lane.shutdown(wait=False)
 
     # -- crash ----------------------------------------------------------------
     def crash(self):

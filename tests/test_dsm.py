@@ -11,6 +11,8 @@ Invariants proved here:
 * peer RStore-staging recovers NEWER state than the pool;
 * the resumed run is bit-identical to an uninterrupted run (determinism).
 """
+import os
+
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -110,9 +112,9 @@ def test_crc_bitrot_falls_back(setup, tmp_path):
     obj = newest["objects"]["params"]
     assert obj["sharded"]
     sh = obj["shards"][0]
-    path = pool._obj_path(sh["name"], sh["version"]) + ".npz"
+    path = pool.payload_path(sh["name"], sh["version"])
     with open(path, "r+b") as f:
-        f.seek(100)
+        f.seek(os.path.getsize(path) // 2)      # mid-payload bit-rot
         f.write(b"\xde\xad\xbe\xef")
     with pytest.raises(CorruptObjectError):
         pool.read_entry("params", obj,

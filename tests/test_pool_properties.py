@@ -50,7 +50,7 @@ def test_truncated_file_detected(tmp_path):
     pool = DSMPool(str(tmp_path))
     tree = {"a": jnp.arange(1000, dtype=jnp.float32)}
     pool.write_object("x", 1, tree)
-    path = pool._obj_path("x", 1) + ".npz"
+    path = pool.payload_path("x", 1)
     data = open(path, "rb").read()
     open(path, "wb").write(data[: len(data) // 2])
     with pytest.raises(CorruptObjectError):

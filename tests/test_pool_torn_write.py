@@ -28,7 +28,17 @@ TPL = {"t": _tree(0.0)}
 def test_each_torn_mode_is_detected(tmp_path, mode):
     pool = DSMPool(str(tmp_path))
     pool.write_object("t", 1, _tree(1.0))
-    corrupt_file(pool._obj_path("t", 1) + ".npz", mode)
+    corrupt_file(pool.payload_path("t", 1), mode)
+    with pytest.raises(CorruptObjectError):
+        pool.read_object("t", 1, _tree(0.0))
+
+
+@pytest.mark.parametrize("mode", TORN_MODES)
+def test_each_torn_mode_is_detected_legacy(tmp_path, mode):
+    """Same guarantee for legacy ``.npz`` objects still in the pool."""
+    pool = DSMPool(str(tmp_path))
+    pool.write_object_legacy("t", 1, _tree(1.0))
+    corrupt_file(pool.payload_path("t", 1), mode)
     with pytest.raises(CorruptObjectError):
         pool.read_object("t", 1, _tree(0.0))
 
@@ -90,8 +100,7 @@ def test_manifest_crc_guards_against_overwritten_payload(tmp_path):
 def test_torn_spill_is_discarded_by_staging_view(tmp_path):
     area = FileStagingArea(str(tmp_path / "stage"))
     area.proxy(1).staging["w0/t"] = (5, _tree(3.0))
-    base = os.path.join(area.area(1), "w0__t")
-    corrupt_file(base + ".npz", "truncate")
+    corrupt_file(area.payload_path(1, "w0/t"), "truncate")
     assert area.view(1, {"w0/t": _tree(0.0)}).staging == {}
 
 
@@ -123,7 +132,7 @@ def test_recovery_prefers_pool_over_torn_staging(tmp_path):
     pool.commit_manifest(3, {"t": obj})
     area = FileStagingArea(str(tmp_path / "stage"))
     area.proxy(1).staging["t"] = (7, _tree(7.0))     # newer than step 3
-    corrupt_file(os.path.join(area.area(1), "t") + ".npz", "zero")
+    corrupt_file(area.payload_path(1, "t"), "zero")
     peer = area.view(1, TPL)
     objs, step, source = RecoveryManager(pool).recover(TPL, (peer,))
     assert (step, source) == (3, "pool")

@@ -1,6 +1,12 @@
 """Recovery fallback path (dsm/recovery.py): a corrupt shard — payload OR
-CRC sidecar — must fail validation of the WHOLE object and push recovery
-back to the previous manifest; recovery never returns torn state."""
+validation metadata (frame header / legacy CRC sidecar) — must fail
+validation of the WHOLE object and push recovery back to the previous
+manifest; recovery never returns torn state.
+
+The sidecar tests rewrite one committed shard in the legacy ``.npz`` +
+``.crc`` format first: they double as backward-compat proof that a
+manifest referencing PRE-format-change objects still validates (and still
+rejects sidecar rot) through the same read path."""
 import json
 import os
 
@@ -9,6 +15,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.data.pipeline import DataPipeline, SyntheticLMSource
+from repro.dsm import stream
 from repro.dsm.pool import CorruptObjectError, DSMPool
 from repro.dsm.recovery import RecoveryManager
 from repro.scenarios.worker import make_toy_state, make_toy_step
@@ -37,12 +44,28 @@ def _newest_params_shard(pool):
     return newest, entry, entry["shards"][1]
 
 
+def _legacyize_shard(pool, shard):
+    """Rewrite one committed shard in the PR-6 ``.npz`` + ``.crc`` sidecar
+    format — same leaves, so the object CRC (and thus the manifest) is
+    unchanged.  The manifest now references a pre-format-change object,
+    exactly the state of a pool mid rolling upgrade."""
+    payload = pool.payload_path(shard["name"], shard["version"])
+    arrays, crc, _ = stream.read_frame(payload)
+    assert crc == shard["crc"]
+    os.unlink(payload)
+    pool.write_object_legacy(shard["name"], shard["version"], list(arrays))
+    return pool._obj_path(shard["name"], shard["version"]) + ".crc"
+
+
 def test_corrupt_crc_sidecar_falls_back(committed_pool):
-    """Bit-rot in the CRC SIDECAR (not the payload) must also invalidate
-    the shard — the sidecar is part of the durable write protocol."""
+    """Bit-rot in a LEGACY object's CRC sidecar (not the payload) must
+    still invalidate the shard — the sidecar is part of the old durable
+    write protocol, and old objects keep their full validation."""
     pool, templates = committed_pool
     newest, entry, shard = _newest_params_shard(pool)
-    sidecar = pool._obj_path(shard["name"], shard["version"]) + ".crc"
+    sidecar = _legacyize_shard(pool, shard)
+    # first prove the legacy-format shard validates as-is (backward compat)
+    pool.read_entry("params", entry, templates["params"])
     with open(sidecar) as f:
         meta = json.load(f)
     meta["crc"] ^= 0xDEADBEEF
@@ -60,7 +83,7 @@ def test_missing_shard_file_falls_back(committed_pool):
     recovery must land on the previous manifest."""
     pool, templates = committed_pool
     newest, entry, shard = _newest_params_shard(pool)
-    os.unlink(pool._obj_path(shard["name"], shard["version"]) + ".npz")
+    os.unlink(pool.payload_path(shard["name"], shard["version"]))
     with pytest.raises(CorruptObjectError):
         pool.read_entry("params", entry, templates["params"])
     objs, rec_step, src = RecoveryManager(pool).recover(templates)
@@ -71,9 +94,27 @@ def test_missing_shard_file_falls_back(committed_pool):
 def test_unreadable_sidecar_falls_back(committed_pool):
     pool, templates = committed_pool
     newest, entry, shard = _newest_params_shard(pool)
-    sidecar = pool._obj_path(shard["name"], shard["version"]) + ".crc"
+    sidecar = _legacyize_shard(pool, shard)
     with open(sidecar, "w") as f:
         f.write("{not json")
+    objs, rec_step, src = RecoveryManager(pool).recover(templates)
+    assert src == "pool"
+    assert rec_step < newest["step"]
+
+
+def test_corrupt_frame_header_falls_back(committed_pool):
+    """The streamed format's analog of sidecar rot: damage to the frame's
+    embedded header (not the payload) must invalidate the shard."""
+    pool, templates = committed_pool
+    newest, entry, shard = _newest_params_shard(pool)
+    payload = pool.payload_path(shard["name"], shard["version"])
+    with open(payload, "r+b") as f:
+        f.seek(18)                   # inside the header JSON
+        b = f.read(1)
+        f.seek(18)
+        f.write(bytes([b[0] ^ 0xFF]))
+    with pytest.raises(CorruptObjectError):
+        pool.read_entry("params", entry, templates["params"])
     objs, rec_step, src = RecoveryManager(pool).recover(templates)
     assert src == "pool"
     assert rec_step < newest["step"]
@@ -92,7 +133,7 @@ def test_all_manifests_corrupt_is_cold_start(tmp_path):
     for name in os.listdir(pool.obj_dir):
         d = os.path.join(pool.obj_dir, name)
         for fn in os.listdir(d):
-            if fn.endswith(".npz"):
+            if fn.endswith((".npz", stream.SUFFIX)):
                 os.unlink(os.path.join(d, fn))
     with pytest.raises(RuntimeError):
         RecoveryManager(pool).recover(templates)

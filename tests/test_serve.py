@@ -235,7 +235,7 @@ def test_session_recover_falls_back_on_torn_commit(smoke, tmp_path):
     # tear the newest commit: clobber its cache object payload
     obj_dir = os.path.join(str(tmp_path / "pool"), "objects", kv_name("r0"))
     newest = sorted(f for f in os.listdir(obj_dir)
-                    if f.endswith(".npz"))[-1]
+                    if f.endswith((".npz", ".cxl0")))[-1]
     with open(os.path.join(obj_dir, newest), "wb") as f:
         f.write(b"torn")
     rec = SessionStore(DSMPool(str(tmp_path / "pool"))).recover(

@@ -1,0 +1,306 @@
+"""Golden tests for the streamed on-disk format (dsm/stream.py) and its
+integration with the pool: round-trips across every dtype the system
+stages (including bfloat16, which numpy's buffer protocol refuses), 0-d
+and empty leaves, nested namespaces; CRC equivalence with the legacy
+``_crc_of_arrays`` definition (the property that makes manifests
+format-agnostic); backward compat with legacy ``.npz`` pool objects and
+legacy staging spills; frame self-validation against every torn mode; and
+the spill-arena reuse contract."""
+import os
+import struct
+import zlib
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.dsm import stream
+from repro.dsm.cluster import FileStagingArea
+from repro.dsm.faults import TORN_MODES, corrupt_file
+from repro.dsm.pool import CorruptObjectError, DSMPool, _crc_of_arrays
+from repro.dsm.recovery import RecoveryManager
+from repro.dsm.tiers import TierManager
+
+try:
+    import ml_dtypes                              # noqa: F401
+    HAVE_BF16 = True
+except ImportError:                               # pragma: no cover
+    HAVE_BF16 = False
+
+
+def _golden_leaves():
+    """One leaf per dtype/shape class the tiers actually move."""
+    rng = np.random.default_rng(0)
+    leaves = [
+        rng.standard_normal((4, 5)).astype(np.float32),
+        rng.standard_normal((2, 3, 2)).astype(np.float16),
+        rng.integers(-1000, 1000, (7,)).astype(np.int32),
+        rng.integers(0, 255, (3, 3)).astype(np.uint8),
+        np.array([True, False, True]),
+        np.int64(42) + np.zeros((), np.int64),    # 0-d
+        np.zeros((0, 8), np.float32),             # empty
+        np.asarray(3.5, np.float64),              # 0-d float
+    ]
+    if HAVE_BF16:
+        import ml_dtypes
+        leaves.append(rng.standard_normal((4, 4))
+                      .astype(ml_dtypes.bfloat16))
+    return leaves
+
+
+def _assert_leaves_equal(got, want):
+    assert len(got) == len(want)
+    for g, w in zip(got, want):
+        assert g.dtype == w.dtype, (g.dtype, w.dtype)
+        assert g.shape == w.shape, (g.shape, w.shape)
+        np.testing.assert_array_equal(np.asarray(g, np.float64)
+                                      if g.dtype.kind not in "biu" else g,
+                                      np.asarray(w, np.float64)
+                                      if w.dtype.kind not in "biu" else w)
+
+
+def _frame_path(tmp_path, leaves, arena=None):
+    path = str(tmp_path / ("f" + stream.SUFFIX))
+    with open(path, "wb") as f:
+        crc, total, header = stream.write_frame(f, leaves, arena)
+    return path, crc, total, header
+
+
+# -- frame round-trip ---------------------------------------------------------
+
+def test_frame_round_trip_all_dtypes(tmp_path):
+    leaves = _golden_leaves()
+    path, crc, total, _ = _frame_path(tmp_path, leaves)
+    got, rcrc, header = stream.read_frame(path, expected_crc=crc)
+    assert rcrc == crc
+    assert header["n"] == len(leaves)
+    _assert_leaves_equal(got, leaves)
+
+
+def test_frame_crc_equals_legacy_definition(tmp_path):
+    """The frame CRC is the fold of every leaf's raw bytes in order — the
+    SAME value ``_crc_of_arrays`` computes, so a manifest written against
+    one format validates objects stored in the other."""
+    leaves = _golden_leaves()
+    _, crc, _, _ = _frame_path(tmp_path, leaves)
+    assert crc == _crc_of_arrays(leaves)
+
+
+def test_frame_payload_is_tight_concatenation(tmp_path):
+    """No padding between leaves: the file size follows exactly from the
+    header (the size equation torn-write readers rely on), and the
+    payload byte count write_frame reports is the plain leaf sum."""
+    leaves = _golden_leaves()
+    path, _, total, header = _frame_path(tmp_path, leaves)
+    assert total == sum(header["nbytes"]) == sum(
+        np.asarray(a).nbytes for a in leaves)
+    hdr2, off, size = stream.read_header(path)
+    assert hdr2 == header
+    assert os.path.getsize(path) == size == off + total + stream._FOOTER_LEN
+
+
+def test_frame_zero_leaves(tmp_path):
+    path, crc, _, _ = _frame_path(tmp_path, [])
+    got, rcrc, header = stream.read_frame(path)
+    assert got == [] and rcrc == crc == 0 and header["n"] == 0
+
+
+def test_read_is_zero_copy_views(tmp_path):
+    """Reads come back as mmap-backed views (np.frombuffer), not copies —
+    each non-trivial leaf's buffer must be rooted in a mmap object."""
+    import mmap as _mmap
+    leaves = [np.arange(1 << 16, dtype=np.float32),
+              np.arange(100, dtype=np.int64)]
+    path, crc, _, _ = _frame_path(tmp_path, leaves)
+    got, _, _ = stream.read_frame(path, expected_crc=crc)
+    for g in got:
+        root = g
+        while isinstance(root, np.ndarray) and root.base is not None:
+            root = root.base
+        if isinstance(root, memoryview):         # np.frombuffer wraps one
+            root = root.obj
+        assert isinstance(root, _mmap.mmap)
+
+
+# -- torn frames --------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", TORN_MODES)
+def test_frame_detects_every_torn_mode(tmp_path, mode):
+    leaves = [np.arange(4096, dtype=np.float32)]
+    path, crc, _, _ = _frame_path(tmp_path, leaves)
+    corrupt_file(path, mode)
+    with pytest.raises(stream.FrameError):
+        stream.read_frame(path, expected_crc=crc)
+
+
+def test_frame_rejects_header_damage(tmp_path):
+    leaves = [np.arange(64, dtype=np.float32)]
+    path, _, _, _ = _frame_path(tmp_path, leaves)
+    with open(path, "r+b") as f:
+        f.seek(stream._HDR_FIXED + 2)            # inside the header JSON
+        b = f.read(1)
+        f.seek(stream._HDR_FIXED + 2)
+        f.write(bytes([b[0] ^ 0xFF]))
+    with pytest.raises(stream.FrameError):
+        stream.read_header(path)
+
+
+def test_frame_rejects_bad_magic(tmp_path):
+    path = str(tmp_path / ("f" + stream.SUFFIX))
+    with open(path, "wb") as f:
+        f.write(b"NOTAFRME" + b"\x00" * 64)
+    with pytest.raises(stream.FrameError):
+        stream.read_frame(path)
+
+
+def test_frame_rejects_footer_truncation(tmp_path):
+    """Losing only the footer (payload intact) must still be torn."""
+    leaves = [np.arange(4096, dtype=np.float32)]
+    path, _, _, _ = _frame_path(tmp_path, leaves)
+    size = os.path.getsize(path)
+    with open(path, "r+b") as f:
+        f.truncate(size - stream._FOOTER_LEN + 3)
+    with pytest.raises(stream.FrameError):
+        stream.read_frame(path)
+
+
+def test_frame_rejects_swapped_footer_crc(tmp_path):
+    """A forged footer CRC fails against expected_crc from the manifest."""
+    leaves = [np.arange(1024, dtype=np.float32)]
+    path, crc, total, _ = _frame_path(tmp_path, leaves)
+    with open(path, "r+b") as f:
+        f.seek(total - stream._FOOTER_LEN + 8)
+        f.write(struct.pack("<I", (crc ^ 0xFFFFFFFF) & 0xFFFFFFFF))
+    with pytest.raises(stream.FrameError):
+        stream.read_frame(path, expected_crc=crc)
+
+
+# -- pool integration ---------------------------------------------------------
+
+def test_pool_round_trip_nested_namespaces(tmp_path):
+    pool = DSMPool(str(tmp_path))
+    tree = {"w0/params": {"layer": {"w": np.ones((3, 3), np.float32),
+                                    "b": np.zeros(3, np.float32)}},
+            "scalars": {"step": np.int64(7)}}
+    obj = pool.write_object("ns/deep/t", 3, tree)
+    got = pool.read_object("ns/deep/t", 3, tree, expected_crc=obj.crc)
+    np.testing.assert_array_equal(got["w0/params"]["layer"]["w"],
+                                  tree["w0/params"]["layer"]["w"])
+    assert int(got["scalars"]["step"]) == 7
+
+
+def test_pool_crc_identical_across_formats(tmp_path):
+    """write_object and write_object_legacy yield the SAME PoolObject crc
+    for the same tree — manifests don't care which format wrote it."""
+    pool = DSMPool(str(tmp_path))
+    tree = {"a": np.arange(100, dtype=np.float32),
+            "b": {"c": np.asarray(1.5, np.float64)}}
+    new = pool.write_object("x", 1, tree)
+    old = pool.write_object_legacy("y", 1, tree)
+    assert new.crc == old.crc
+    assert new.nbytes == old.nbytes
+
+
+def test_pool_reads_legacy_npz_objects(tmp_path):
+    """Backward compat: objects written by the PR-6 pool (np.savez +
+    sidecar) still read, CRC-validate, and recover."""
+    pool = DSMPool(str(tmp_path))
+    tree = {"a": np.arange(50, dtype=np.float32)}
+    obj = pool.write_object_legacy("t", 1, tree)
+    assert os.path.basename(pool.payload_path("t", 1)).endswith(".npz")
+    got = pool.read_object("t", 1, tree, expected_crc=obj.crc)
+    np.testing.assert_array_equal(got["a"], tree["a"])
+    pool.commit_manifest(0, {"t": obj})
+    objs, step, src = RecoveryManager(pool).recover({"t": tree})
+    assert (step, src) == (0, "pool")
+    np.testing.assert_array_equal(objs["t"]["a"], tree["a"])
+
+
+def test_mixed_format_manifest_recovers(tmp_path):
+    """One manifest referencing a legacy object AND a streamed object —
+    the mid-upgrade state — must validate and recover whole."""
+    pool = DSMPool(str(tmp_path))
+    t1 = {"a": np.arange(10, dtype=np.float32)}
+    t2 = {"b": np.arange(20, dtype=np.int32)}
+    o1 = pool.write_object_legacy("old", 1, t1)
+    o2 = pool.write_object("new", 1, t2)
+    pool.commit_manifest(0, {"old": o1, "new": o2})
+    objs, step, src = RecoveryManager(pool).recover({"old": t1, "new": t2})
+    assert (step, src) == (0, "pool")
+    np.testing.assert_array_equal(objs["old"]["a"], t1["a"])
+    np.testing.assert_array_equal(objs["new"]["b"], t2["b"])
+
+
+@pytest.mark.skipif(not HAVE_BF16, reason="ml_dtypes unavailable")
+def test_pool_round_trip_bfloat16(tmp_path):
+    import ml_dtypes
+    pool = DSMPool(str(tmp_path))
+    tree = {"w": np.arange(32).reshape(4, 8).astype(ml_dtypes.bfloat16)}
+    obj = pool.write_object("bf", 1, tree)
+    got = pool.read_object("bf", 1, tree, expected_crc=obj.crc)
+    assert got["w"].dtype == tree["w"].dtype
+    np.testing.assert_array_equal(np.asarray(got["w"], np.float32),
+                                  np.asarray(tree["w"], np.float32))
+
+
+# -- staging backward compat --------------------------------------------------
+
+def test_staging_reads_legacy_spills(tmp_path):
+    """A staging area populated by the PR-6 writer (``.npz`` + dtype/shape
+    meta) is still readable by today's ``view``."""
+    tree = {"w": np.full((4, 4), 2.5, np.float32)}
+    legacy = FileStagingArea(str(tmp_path / "s"), legacy_format=True)
+    legacy.proxy(1).staging["w0/t"] = (9, tree)
+    # a fresh, default-format handle on the same root reads it
+    area = FileStagingArea(str(tmp_path / "s"))
+    view = area.view(1, {"w0/t": tree})
+    tag, got = view.staging["w0/t"]
+    assert tag == 9
+    np.testing.assert_array_equal(got["w"], tree["w"])
+
+
+def test_staging_streams_and_rstore_defers_d2h(tmp_path):
+    """The streamed spill path end-to-end through rstore, and satellite 6:
+    a spill-file peer advertises ``materializes_leaves`` so rstore hands
+    the tree over without an eager whole-tree host copy."""
+    pool = DSMPool(str(tmp_path / "p"))
+    area = FileStagingArea(str(tmp_path / "s"))
+    proxy = area.proxy(0)
+    assert getattr(proxy.staging, "materializes_leaves", False)
+    tiers = TierManager(pool, worker_id=1)
+    tree = {"w": np.arange(64, dtype=np.float32)}
+    tiers.lstore("w1/t", tree)
+    tiers.rstore("w1/t", proxy, tag=4)
+    assert area.payload_path(0, "w1/t").endswith(stream.SUFFIX)
+    view = area.view(0, {"w1/t": tree})
+    tag, got = view.staging["w1/t"]
+    assert tag == 4
+    np.testing.assert_array_equal(got["w"], tree["w"])
+    # in-process dict peers do NOT advertise it: rstore still snapshots
+    peer = TierManager(pool, worker_id=2)
+    assert not getattr(peer.staging, "materializes_leaves", False)
+
+
+# -- arena --------------------------------------------------------------------
+
+def test_arena_reuses_buffer_across_writes(tmp_path):
+    arena = stream.SpillArena()
+    leaves = [np.full((64,), i, np.float32) for i in range(32)]
+    for i in range(5):
+        path = str(tmp_path / f"f{i}{stream.SUFFIX}")
+        with open(path, "wb") as f:
+            stream.write_frame(f, leaves, arena)
+    assert arena.allocations == 1        # one grow, then steady-state reuse
+    got, _, _ = stream.read_frame(str(tmp_path / f"f4{stream.SUFFIX}"))
+    _assert_leaves_equal(got, leaves)
+
+
+def test_arena_grows_geometrically():
+    arena = stream.SpillArena()
+    arena.checkout(10)
+    arena.checkout(arena.MIN_BYTES * 3)
+    assert arena.allocations == 2
+    mv = arena.checkout(arena.MIN_BYTES * 2)   # fits in the grown buffer
+    assert arena.allocations == 2
+    assert len(mv) >= arena.MIN_BYTES * 2
