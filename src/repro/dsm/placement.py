@@ -33,7 +33,12 @@ Wiring (each opt-in, defaults unchanged):
   evicted session cache to staging or (sharded) pool per decision;
 * cluster ranks call ``plan_rank_staging`` to decide whether ring
   RStore-staging their partition every step is worth its cost
-  (``scenarios/cluster_worker.py --topology``).
+  (``scenarios/cluster_worker.py --topology``);
+* the fleet controller (``serve.fleet``) prices ``choose_admission``
+  (which engine serves a new request: queue-depth decode latency plus
+  prefill replay vs pool block restore when a shared prefix is
+  reusable) and ``choose_migration`` (is rebalancing an in-flight
+  session worth the RStore+adopt traffic vs staying put).
 """
 from __future__ import annotations
 
@@ -49,7 +54,8 @@ class Decision:
     """One logged placement decision: what was chosen for which object,
     and the modelled cost of every alternative (ns) — so tests and the
     bench can assert WHY, not just what."""
-    kind: str                    # "spill" | "shards" | "schedule" | "staging"
+    # "spill" | "shards" | "schedule" | "staging" | "admit" | "migrate"
+    kind: str
     name: str
     nbytes: int
     choice: Any
@@ -63,18 +69,23 @@ class PlacementPolicy:
                  replay_ns_per_byte: float = 0.2,
                  sync_threshold_ns: float = 1e6,
                  max_shards: int = 16,
-                 restore_fraction: float = 1.0):
+                 restore_fraction: float = 1.0,
+                 decode_tick_ns: float = 5e5):
         """``p_peer_loss``: probability the peer holding a staged-only copy
         crashes before the copy is consumed (the CXL0 cache-loss model);
         ``replay_ns_per_byte``: recompute cost of a lost copy;
         ``restore_fraction``: fraction of spilled objects later read back
-        (1.0 = every spill is restored, the serving eviction pattern)."""
+        (1.0 = every spill is restored, the serving eviction pattern);
+        ``decode_tick_ns``: modelled wall time of one slot-batched decode
+        tick — converts an engine's queue depth into the wait a newly
+        admitted (or rebalanced) request pays before its slot frees."""
         self.topology: Topology = get_topology(topology)
         self.p_peer_loss = p_peer_loss
         self.replay_ns_per_byte = replay_ns_per_byte
         self.sync_threshold_ns = sync_threshold_ns
         self.max_shards = max_shards
         self.restore_fraction = restore_fraction
+        self.decode_tick_ns = decode_tick_ns
         self.decisions: List[Decision] = []
 
     def _log(self, kind: str, name: str, nbytes: int, choice,
@@ -136,6 +147,57 @@ class PlacementPolicy:
         self._log("schedule", name, nbytes, choice,
                   {"flush_ns": flush,
                    "sync_threshold_ns": self.sync_threshold_ns})
+        return choice
+
+
+    # -- fleet admission -----------------------------------------------------
+    def admission_costs(self, queue_depths: Dict[int, int], nbytes: int,
+                        reusable: Dict[int, bool]) -> Dict[str, float]:
+        """Expected ns until a new request's first token, per engine.
+        Two terms: the queue wait (depth x modelled decode tick) and the
+        prefill — replayed from the prompt at ``replay_ns_per_byte``
+        unless this engine can restore a shared-prefix block set from
+        the pool (``reusable``), which costs a pool RLoad instead."""
+        t = self.topology
+        out: Dict[str, float] = {}
+        for eid, depth in queue_depths.items():
+            fill = (rload_pool_ns(t, nbytes) if reusable.get(eid)
+                    else self.replay_ns_per_byte * nbytes)
+            out[f"e{eid}"] = depth * self.decode_tick_ns + fill
+        return out
+
+    def choose_admission(self, rid: str, queue_depths: Dict[int, int],
+                         nbytes: int,
+                         reusable: Dict[int, bool] = {}) -> int:
+        """Pick the engine a new request is routed to (lowest expected
+        time-to-first-token; ties break to the lowest engine id, which
+        keeps the decision deterministic).  Logged as ``admit``."""
+        costs = self.admission_costs(queue_depths, nbytes, reusable)
+        choice = min(sorted(costs), key=costs.get)
+        self._log("admit", rid, nbytes, choice, costs)
+        return int(choice[1:])
+
+    # -- fleet rebalancing ---------------------------------------------------
+    def migration_costs(self, nbytes: int, imbalance: int
+                        ) -> Dict[str, float]:
+        """``move``: RStore the session's dirty blocks into the target's
+        staging buffer + the target's adoption read.  ``stay``: the
+        queue-depth gap keeps costing the session one decode-tick wait
+        per tick of imbalance.  Clean pool-resident blocks move zero
+        bytes either way (the block table carries them by reference)."""
+        t = self.topology
+        return {"move": rstore_ns(t, nbytes) + rload_staging_ns(t, nbytes),
+                "stay": max(0, imbalance) * self.decode_tick_ns}
+
+    def choose_migration(self, rid: str, nbytes: int,
+                         imbalance: int) -> bool:
+        """Is migrating ``rid``'s ``nbytes`` of dirty blocks to the less
+        loaded engine worth the transfer, given the queue-depth
+        ``imbalance`` (source depth minus target depth)?  Logged as
+        ``migrate``."""
+        costs = self.migration_costs(nbytes, imbalance)
+        choice = costs["move"] < costs["stay"]
+        self._log("migrate", rid, nbytes, choice, costs)
         return choice
 
 

@@ -14,6 +14,11 @@ flags, builds the (data, model) mesh and reports throughput.
 
     # the static-batch baseline the benchmark compares against
     python -m repro.launch.serve --smoke --mode static
+
+    # a 2-engine fleet over one pool: cost-routed admission, automatic
+    # rebalancing migrations, cross-engine prefix reuse
+    python -m repro.launch.serve --smoke --pool /tmp/fleet_pool \
+        --engines 2 --topology cxl20-switched-pool
 """
 from __future__ import annotations
 
@@ -62,12 +67,28 @@ def main():
                          "restarts then replay only unfinished sessions)")
     ap.add_argument("--restore-mode", default="cache",
                     choices=["cache", "replay"])
+    ap.add_argument("--engines", type=int, default=1,
+                    help=">= 2 serves the trace with a FLEET of engines "
+                         "over one pool: cost-routed admission, "
+                         "rebalancing live migrations, prefix reuse")
+    ap.add_argument("--block-tokens", type=int, default=16,
+                    help="paged KV layout: tokens per pool block")
+    ap.add_argument("--no-prefix-reuse", action="store_true",
+                    help="fleet: disable content-addressed cross-engine "
+                         "prefix blocks")
     args = ap.parse_args()
     if args.commit_mode == AUTO_MODE and args.topology is None:
         ap.error("--commit-mode auto requires --topology")
     if args.topology is not None and args.pool is None:
         ap.error("--topology drives durable-commit placement: it needs "
                  "--pool (stateless serving has nothing to place)")
+    if args.engines >= 2:
+        if args.pool is None:
+            ap.error("--engines >= 2 is fleet serving over a SHARED "
+                     "pool: it needs --pool")
+        if args.mode != "continuous":
+            ap.error("fleet serving is continuous-batching only")
+        return _fleet_main(args)
 
     n_dev = jax.device_count()
     mesh = jax.make_mesh((max(n_dev // args.mesh_model, 1),
@@ -110,6 +131,44 @@ def main():
           + (f", {res.commits} session commits" if res.commits else "")
           + (f", {res.resumed_sessions} sessions resumed"
              if res.resumed_sessions else ""))
+
+
+def _fleet_main(args):
+    from repro.configs import get_config, get_smoke_config
+    from repro.serve.fleet import FleetController
+
+    cfg = (get_smoke_config(args.arch) if args.smoke
+           else get_config(args.arch))
+    new_tokens = tuple(int(t) for t in args.new_tokens.split(","))
+    trace = synthetic_trace(args.requests, seed=args.seed,
+                            prompt_lens=(args.prompt_len,),
+                            new_tokens=new_tokens,
+                            vocab_size=cfg.vocab_size)
+    fl = FleetController(
+        args.arch, pool_path=args.pool, n_engines=args.engines,
+        smoke=args.smoke, n_slots=args.slots, t_max=trace_t_max(trace),
+        commit_every=args.commit_every, commit_mode=args.commit_mode,
+        topology=args.topology, seed=args.seed,
+        block_tokens=args.block_tokens,
+        prefix_reuse=not args.no_prefix_reuse,
+        restore_mode=args.restore_mode, retire_done=args.retire_done)
+    steps = fl.resume()
+    resumed = [f"e{i}@{s}" for i, s in steps.items() if s is not None]
+    if resumed:
+        print(f"resumed: {', '.join(resumed)}")
+    t0 = time.perf_counter()
+    res = fl.run(trace)
+    dt = time.perf_counter() - t0
+    fl.close()
+    per = ", ".join(
+        f"e{i}: {len(r.outputs)} req / {r.prefills} prefills / "
+        f"{r.prefix_hits} prefix hits"
+        for i, r in sorted(res.per_engine.items()))
+    print(f"fleet[{args.engines}]: {len(res.outputs)} requests, "
+          f"{res.emitted_tokens} tokens in {dt:.2f}s "
+          f"({res.emitted_tokens / dt:.0f} tok/s incl. compile), "
+          f"{res.migrations} migrations, {res.prefix_hits} prefix hits "
+          f"({per})")
 
 
 if __name__ == "__main__":

@@ -297,6 +297,131 @@ def run_serve_suite(workdir: Optional[str] = None, **kwargs
             for p in KILL_POINTS]
 
 
+# ---------------------------------------------------------------------------
+# Fleet migration scenarios (2 engines, one pool, kill mid-migration)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FleetScenarioResult:
+    """One kill-during-migration cell: the source engine dies right
+    after a migration phase; the restarted fleet must re-establish the
+    exactly-one-owner invariant and finish with outputs BIT-IDENTICAL to
+    a single-engine reference run of the same trace.  ``staging`` says
+    whether the target's host buffer survived ("kept") or was wiped
+    ("wiped" — adoption must take the pool arm of staging-or-pool)."""
+    kill_point: str
+    staging: str
+    killed: bool
+    outputs_match: bool
+    resumed_sessions: int
+    migrations_after_restart: int
+    detail: str = ""
+
+    @property
+    def ok(self) -> bool:
+        return self.killed and self.outputs_match
+
+
+def _run_fleet_worker(pool: str, *, requests: int, slots: int,
+                      commit_every: int, engines: int, migrate_at: int,
+                      mig_kill_point: str, wipe_staging: int,
+                      timeout: int) -> subprocess.CompletedProcess:
+    cmd = [sys.executable, "-m", "repro.scenarios.serve_worker",
+           "--pool", pool, "--requests", str(requests),
+           "--slots", str(slots), "--commit-every", str(commit_every),
+           "--engines", str(engines), "--migrate-at", str(migrate_at),
+           "--mig-kill-point", mig_kill_point,
+           "--wipe-staging", str(wipe_staging)]
+    return subprocess.run(cmd, env=_worker_env(), capture_output=True,
+                          text=True, timeout=timeout)
+
+
+def run_fleet_scenario(mig_kill_point: str, workdir: str, *,
+                       requests: int = 6, slots: int = 2,
+                       commit_every: int = 2, engines: int = 2,
+                       migrate_at: int = 4, wipe_staging: bool = False,
+                       ref_outputs: Optional[dict] = None,
+                       timeout: int = 600) -> FleetScenarioResult:
+    from repro.serve.fleet import MIGRATION_POINTS
+    if mig_kill_point not in MIGRATION_POINTS:
+        raise ValueError(f"unknown migration point {mig_kill_point!r}; "
+                         f"expected one of {MIGRATION_POINTS}")
+    staging = "wiped" if wipe_staging else "kept"
+    pool = os.path.join(workdir, f"fleet_{mig_kill_point}_{staging}")
+
+    # 1. kill phase: the fleet process dies right after the phase
+    p1 = _run_fleet_worker(pool, requests=requests, slots=slots,
+                           commit_every=commit_every, engines=engines,
+                           migrate_at=migrate_at,
+                           mig_kill_point=mig_kill_point,
+                           wipe_staging=-1, timeout=timeout)
+    if p1.returncode != KILL_EXIT:
+        return FleetScenarioResult(mig_kill_point, staging, False, False,
+                                   0, 0,
+                                   detail=f"kill phase rc={p1.returncode}"
+                                          f": {p1.stderr[-1000:]}")
+
+    # 2. restart: recover all engines, complete the handoff, finish.
+    #    The wiped variant loses the target's host buffer with the crash
+    #    (the CXL0 cache-loss model): adoption must read the pool.
+    p2 = _run_fleet_worker(pool, requests=requests, slots=slots,
+                           commit_every=commit_every, engines=engines,
+                           migrate_at=0, mig_kill_point="none",
+                           wipe_staging=2 if wipe_staging else -1,
+                           timeout=timeout)
+    if p2.returncode != 0:
+        return FleetScenarioResult(mig_kill_point, staging, True, False,
+                                   0, 0,
+                                   detail=f"restart rc={p2.returncode}: "
+                                          f"{p2.stderr[-1000:]}")
+    res = _result_json(p2)
+
+    # 3. verdict: bit-identical to a single-engine run of the same trace
+    if ref_outputs is None:
+        ref_outputs = fleet_reference(workdir, requests=requests,
+                                      slots=slots,
+                                      commit_every=commit_every,
+                                      timeout=timeout)
+    return FleetScenarioResult(
+        mig_kill_point, staging, True, res["outputs"] == ref_outputs,
+        res["resumed_sessions"], res.get("migrations", 0))
+
+
+def fleet_reference(workdir: str, *, requests: int = 6, slots: int = 2,
+                    commit_every: int = 2, timeout: int = 600) -> dict:
+    """Single-engine uninterrupted run of the fleet trace — migration
+    and fleet routing must not change a single output token."""
+    proc = _run_serve_worker(os.path.join(workdir, "fleet_reference"),
+                             requests=requests, slots=slots,
+                             commit_every=commit_every,
+                             restore_mode="cache",
+                             kill_point="none", kill_step=0,
+                             timeout=timeout)
+    if proc.returncode != 0:
+        raise RuntimeError(f"fleet reference failed: "
+                           f"{proc.stderr[-2000:]}")
+    return _result_json(proc)["outputs"]
+
+
+def run_fleet_suite(workdir: Optional[str] = None, *,
+                    points: Optional[List[str]] = None,
+                    **kwargs) -> List[FleetScenarioResult]:
+    """Kill at every migration phase x (staging kept, staging wiped),
+    against one shared single-engine reference."""
+    from repro.serve.fleet import MIGRATION_POINTS
+    workdir = workdir or tempfile.mkdtemp(prefix="scenarios_")
+    ref = fleet_reference(workdir,
+                          **{k: v for k, v in kwargs.items()
+                             if k in ("requests", "slots", "commit_every",
+                                      "timeout")})
+    out = []
+    for p in (points or MIGRATION_POINTS):
+        for wipe in (False, True):
+            out.append(run_fleet_scenario(p, workdir, wipe_staging=wipe,
+                                          ref_outputs=ref, **kwargs))
+    return out
+
+
 def main(argv=None) -> int:
     import argparse
     ap = argparse.ArgumentParser()
@@ -314,6 +439,12 @@ def main(argv=None) -> int:
                     help="serve suite: decode slots")
     ap.add_argument("--restore-mode", default="cache",
                     choices=["cache", "replay"])
+    ap.add_argument("--engines", type=int, default=1,
+                    help="serve suite: >= 2 switches to the fleet "
+                         "migration kill cells (kill the source engine "
+                         "after each migration phase; the restarted "
+                         "fleet must finish bit-identically, with the "
+                         "target adopting from staging-or-pool)")
     def _world(v):
         if int(v) < 3:
             raise argparse.ArgumentTypeError(
@@ -366,6 +497,16 @@ def main(argv=None) -> int:
 
     def _serve_suite():
         nonlocal failed
+        if args.engines >= 2:
+            for r in run_fleet_suite(workdir, engines=args.engines):
+                status = "OK" if r.ok else "FAIL"
+                failed += not r.ok
+                print(f"fleet_scenario,{r.kill_point},{r.staging},"
+                      f"{status},"
+                      f"resumed_sessions={r.resumed_sessions},"
+                      f"outputs_bit_identical={r.outputs_match}"
+                      + (f",detail={r.detail}" if r.detail else ""))
+            return
         for r in run_serve_suite(workdir, requests=args.requests,
                                  slots=args.slots,
                                  restore_mode=args.restore_mode):

@@ -17,8 +17,20 @@ so the runner can compare kill+restart against an uninterrupted
 reference run — the durable-serving contract is that they are
 bit-identical.
 
+Fleet mode (``--engines N``, N >= 2) runs the FleetController over the
+same pool: cost-routed admission, optional forced live migration
+(``--migrate-at TICK`` moves the oldest running session from engine 1 to
+engine 2) and migration-phase kill points (``--mig-kill-point`` dies at
+one of serve.fleet.MIGRATION_POINTS).  ``--wipe-staging R`` simulates
+the loss of engine R's host staging buffer before recovery, forcing the
+pool arm of the staging-or-pool adoption.  ``--engine-id`` +
+``--trace-slice`` instead run ONE namespaced engine of a fleet pool over
+a slice of the trace — the benchmark's parallel-speedup cell.
+
     PYTHONPATH=src python -m repro.scenarios.serve_worker \
         --pool /tmp/sp --kill-point mid_flush --kill-step 6
+    PYTHONPATH=src python -m repro.scenarios.serve_worker \
+        --pool /tmp/fp --engines 2 --migrate-at 4 --mig-kill-point mig_commit
 """
 from __future__ import annotations
 
@@ -26,10 +38,12 @@ import argparse
 import json
 import os
 import sys
+import time
 import zlib
 
 from repro.dsm.flit_runtime import COMMIT_MODES, KILL_POINTS
 from repro.scenarios.worker import KILL_EXIT
+from repro.serve.fleet import MIGRATION_POINTS
 
 
 def outputs_digest(outputs: dict) -> int:
@@ -59,6 +73,35 @@ def main(argv=None) -> int:
                          "tick is >= this")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--result", default="")
+    # fleet mode -------------------------------------------------------------
+    ap.add_argument("--engines", type=int, default=1,
+                    help=">= 2 runs the FleetController over the pool")
+    ap.add_argument("--migrate-at", type=int, default=0,
+                    help="fleet: once engine 1 reaches this tick, live-"
+                         "migrate its oldest running session to engine 2 "
+                         "(0 = no forced migration)")
+    ap.add_argument("--mig-kill-point", default="none",
+                    choices=("none",) + MIGRATION_POINTS,
+                    help="fleet: os._exit after this migration phase")
+    ap.add_argument("--wipe-staging", type=int, default=-1,
+                    help="wipe engine R's staging buffer before recovery "
+                         "(simulated host-buffer loss; -1 = keep)")
+    ap.add_argument("--prefix-reuse", action="store_true",
+                    help="content-addressed cross-engine prefix blocks")
+    ap.add_argument("--rebalance", action="store_true",
+                    help="fleet: cost-approved automatic rebalancing")
+    # single-engine-of-a-fleet mode (the parallel bench cell) ----------------
+    ap.add_argument("--engine-id", type=int, default=0,
+                    help="run ONE namespaced engine of a fleet pool")
+    ap.add_argument("--trace-slice", default="",
+                    help="serve only trace[a:b] (python slice 'a:b')")
+    ap.add_argument("--n-prompts", type=int, default=0,
+                    help="shared-prefix workload: draw only this many "
+                         "distinct prompts and cycle them (0 = every "
+                         "request gets a fresh prompt)")
+    ap.add_argument("--warmup", action="store_true",
+                    help="compile prefill/decode before the timed run; the "
+                         "result's serve_seconds then excludes compilation")
     args = ap.parse_args(argv)
 
     hook = None
@@ -69,32 +112,55 @@ def main(argv=None) -> int:
                 sys.stderr.flush()
                 os._exit(KILL_EXIT)
 
+    mig_hook = None
+    if args.mig_kill_point != "none":
+        def mig_hook(point, rid=None, src=None, dst=None):
+            if point == args.mig_kill_point:
+                sys.stderr.write(f"KILL {point} rid={rid} "
+                                 f"{src}->{dst}\n")
+                sys.stderr.flush()
+                os._exit(KILL_EXIT)
+
     # imports after arg parsing: a bad flag should not pay jax startup
+    from repro.configs import get_smoke_config
     from repro.dsm.api import CXL0Config
     from repro.serve.engine import build_serve_engine
+    from repro.serve.fleet import FleetController
     from repro.serve.trace import synthetic_trace, trace_t_max
 
     new_tokens = tuple(int(t) for t in args.new_tokens.split(","))
     # the trace is a pure function of the CLI args: the restarted process
-    # regenerates the exact request stream the killed one was serving
-    trace = synthetic_trace(args.requests, seed=args.seed,
-                            prompt_lens=(args.prompt_len,),
-                            new_tokens=new_tokens, vocab_size=1)
-    engine, cfg = build_serve_engine(
-        args.arch, smoke=True, n_slots=args.slots,
-        t_max=trace_t_max(trace),
-        dsm=CXL0Config(path=args.pool, schedule=args.commit_mode,
-                       retention=2, fault_hook=hook),
-        commit_every=args.commit_every,
-        restore_mode=args.restore_mode, seed=args.seed)
+    # regenerates the exact request stream the killed one was serving —
+    # and every member of a fleet bench cell generates the same stream
     trace = synthetic_trace(args.requests, seed=args.seed,
                             prompt_lens=(args.prompt_len,),
                             new_tokens=new_tokens,
-                            vocab_size=cfg.vocab_size)
+                            vocab_size=get_smoke_config(
+                                args.arch).vocab_size,
+                            n_prompts=args.n_prompts)
+    t_max = trace_t_max(trace)
+    if args.trace_slice:
+        a, b = args.trace_slice.split(":")
+        trace = trace[int(a or 0):int(b) if b else None]
+
+    if args.engines >= 2:
+        return _fleet_main(args, trace, t_max, hook, mig_hook)
+
+    engine, cfg = build_serve_engine(
+        args.arch, smoke=True, n_slots=args.slots, t_max=t_max,
+        dsm=CXL0Config(path=args.pool, schedule=args.commit_mode,
+                       retention=2, fault_hook=hook),
+        commit_every=args.commit_every,
+        restore_mode=args.restore_mode, seed=args.seed,
+        engine_id=args.engine_id, prefix_reuse=args.prefix_reuse)
 
     resumed_from = engine.resume()
     recovered_done = len(engine.results)      # finished before the kill
+    if args.warmup:
+        engine.warmup([len(r.prompt) for r in trace])
+    t0 = time.perf_counter()
     res = engine.run(trace)
+    serve_seconds = time.perf_counter() - t0
     engine.close()
 
     result = {
@@ -107,13 +173,84 @@ def main(argv=None) -> int:
         "commits": res.commits,
         "decode_ticks": res.decode_ticks,
         "prefills": res.prefills,
+        "prefix_hits": res.prefix_hits,
+        "emitted_tokens": res.emitted_tokens,
+        "serve_seconds": serve_seconds,
     }
+    return _emit(result, args)
+
+
+def _emit(result: dict, args) -> int:
     line = json.dumps(result)
     if args.result:
         with open(args.result, "w") as f:
             f.write(line)
     print(line)
     return 0
+
+
+def _fleet_main(args, trace, t_max, fault_hook, mig_hook) -> int:
+    """N engines over one pool in this process: forced-migration kill
+    cells and the zero-token-loss check.  The restart command (kill
+    points off) recovers every engine, completes any half-done handoff
+    and finishes the identical trace."""
+    from repro.serve.fleet import FleetController
+    fl = FleetController(
+        args.arch, pool_path=args.pool, n_engines=args.engines,
+        n_slots=args.slots, t_max=t_max,
+        commit_every=args.commit_every, commit_mode=args.commit_mode,
+        prefix_reuse=args.prefix_reuse, seed=args.seed,
+        restore_mode=args.restore_mode, fault_hook=fault_hook,
+        mig_hook=mig_hook)
+    if args.wipe_staging >= 0:
+        # the target's host buffer vanished with its previous
+        # incarnation: adoption must take the pool arm
+        fl.staging.wipe(args.wipe_staging)
+    steps = fl.resume()
+    resumed_from = max((s for s in steps.values() if s is not None),
+                      default=None)
+    resumed_sessions = sum(e._n_resumed for e in fl.engines.values())
+    recovered_done = sum(len(e.results) for e in fl.engines.values())
+    fl.submit(trace)
+    if args.warmup:
+        for e in fl.engines.values():
+            e.warmup([len(r.prompt) for r in trace])
+    migrated = False
+    ticks0 = {i: e._tick for i, e in fl.engines.items()}
+    t0 = time.perf_counter()
+    while not fl.done:
+        fl.tick(rebalance=args.rebalance)
+        if (args.migrate_at and not migrated
+                and fl.engines[1]._tick >= args.migrate_at):
+            src = fl.engines[1]
+            rid = next((r for r in src.sched.admission_order
+                        if r in src.sched.running), None)
+            if rid is not None:
+                migrated = True
+                fl.migrate(rid, 1, 2)
+    res = fl.finish(ticks0)
+    serve_seconds = time.perf_counter() - t0
+    fl.close()
+
+    result = {
+        "ok": True,
+        "outputs": res.outputs,
+        "digest": outputs_digest(res.outputs),
+        "resumed_from": resumed_from,
+        "resumed_sessions": resumed_sessions,
+        "recovered_done": recovered_done,
+        "commits": sum(r.commits for r in res.per_engine.values()),
+        "decode_ticks": max(r.decode_ticks
+                            for r in res.per_engine.values()),
+        "prefills": sum(r.prefills for r in res.per_engine.values()),
+        "prefix_hits": res.prefix_hits,
+        "migrations": res.migrations,
+        "emitted_tokens": res.emitted_tokens,
+        "serve_seconds": serve_seconds,
+        "per_engine_outputs": {i: len(r.outputs)
+                               for i, r in res.per_engine.items()},
+    }
+    return _emit(result, args)
 
 
 if __name__ == "__main__":

@@ -1,20 +1,25 @@
 """ServeEngine: continuous batching + tiered KV caches + durable sessions.
 
-The serving loop per decode tick:
+The serving loop per decode tick (``tick()`` — ``run()`` just loops it,
+and a fleet controller interleaves many engines' ticks over one pool):
 
 1. **admit** — free slots refill FIFO from the scheduler; each admission
    prefills ONE sequence (B=1, compiled once per distinct prompt length),
-   writes its cache into the slot lane and emits its first token;
+   writes its cache into the slot lane and emits its first token — or,
+   with prefix reuse enabled, restores the prompt's content-addressed
+   pool blocks and skips the prefill entirely;
 2. **decode** — one slot-masked batched decode step advances every
    running slot at its own position (``train.step.make_slot_decode_step``
    — a per-slot vmap, so slot contents never influence each other);
 3. **retire** — sequences that hit their token budget free their slot in
-   the same tick (the scheduler contract), and their cache leaves the
-   host tier;
-4. **commit** (every ``commit_every`` ticks, durable pools only) — every
-   running slot's cache is staged into the host tier and the FliT
-   committer flushes them + the full session table in one atomic
-   completeOp (serve.sessions).
+   the same tick (the scheduler contract), their block frames return to
+   the allocator and their staged blocks leave the host tier;
+4. **commit** (every ``commit_every`` ticks, durable pools only) — the
+   PAGED layout (serve.paging, the default): only the token blocks each
+   session's position touched since the last commit are staged + flushed;
+   the manifest carries every clean block by reference (serve.sessions).
+   ``paged=False`` keeps the legacy whole-lane path for the equivalence
+   tests.
 
 Crash recovery: a restarted worker calls ``resume()`` — finished
 sessions come back as results; running sessions re-enter the admission
@@ -23,6 +28,13 @@ lane (``restore_mode="cache"``) or replayed from the prompt
 (``restore_mode="replay"``).  Both are bit-identical to the
 uninterrupted run: the restored bytes ARE the committed HBM bytes, and a
 replay re-executes the identical deterministic computation.
+
+Live migration (driven by serve.fleet): ``begin_migration`` freezes a
+session and frees its slot mid-flight, ``stage_migration`` RStores its
+dirty blocks into the target's staging buffer, ``commit_handoff`` makes
+the handoff durable, and the target's ``install_session`` re-admits it
+at the FRONT of the queue — the token stream is bit-identical across
+the handoff because the adopted cache bytes equal the frozen lane bytes.
 
 ``run_static`` is the old static-batch loop kept as the benchmark
 baseline: batched prefill, then decode until the LONGEST sequence of the
@@ -39,6 +51,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.serve.kvcache import TieredKVCache
+from repro.serve.paging import (BLOCK_TOKENS, BlockAllocator, BlockPager,
+                                BlockRef, BlockTable, STATE_BLOCK)
 from repro.serve.scheduler import Request, SlotScheduler
 from repro.serve.sessions import Session, SessionStore
 from repro.train.step import make_serve_steps, make_slot_decode_step
@@ -54,6 +68,9 @@ class ServeResult:
     resumed_step: Optional[int] = None
     resumed_sessions: int = 0
     commits: int = 0
+    prefix_hits: int = 0              # admissions served from shared blocks
+    migrated_in: int = 0
+    migrated_out: int = 0
 
 
 class ServeEngine:
@@ -62,7 +79,12 @@ class ServeEngine:
                  store: Optional[SessionStore] = None,
                  commit_every: int = 0,
                  restore_mode: str = "cache",
-                 retire_done: bool = False):
+                 retire_done: bool = False,
+                 paged: bool = True,
+                 block_tokens: int = BLOCK_TOKENS,
+                 allocator: Optional[BlockAllocator] = None,
+                 prefix_reuse: bool = False,
+                 prefix_key: str = ""):
         assert restore_mode in ("cache", "replay"), restore_mode
         if bundle.cfg.is_encdec:
             raise ValueError(
@@ -74,9 +96,16 @@ class ServeEngine:
         self.n_slots = n_slots
         self.t_max = t_max
         self.store = store
+        self.engine_id = store.engine_id if store is not None else 0
         self.commit_every = commit_every if store is not None else 0
         self.restore_mode = restore_mode
         self.retire_done = retire_done
+        self.paged = paged and store is not None
+        self.block_tokens = block_tokens
+        #: reuse is sound only within one model identity: ``prefix_key``
+        #: must fold arch + params seed (build_serve_engine sets it)
+        self.prefix_reuse = prefix_reuse and self.paged
+        self.prefix_key = prefix_key
 
         prefill_step, decode_step = make_serve_steps(bundle, ctx)
         self._prefill = jax.jit(prefill_step)
@@ -92,6 +121,15 @@ class ServeEngine:
         self.sessions: Dict[str, Session] = {}
         self.results: Dict[str, List[int]] = {}
         self._resume_cache: Dict[str, Any] = {}
+        #: recovered handoff tables of sessions we migrated OUT whose
+        #: target never committed its adoption — the fleet resume
+        #: completes these (serve.fleet.FleetController.resume)
+        self._handoffs: Dict[str, Optional[BlockTable]] = {}
+        if self.paged:
+            self.pager = BlockPager(bundle, t_max, block_tokens)
+            frames = n_slots * (self.pager.n_blocks(t_max) + 1) + 8
+            self.allocator = allocator or BlockAllocator(max(64, 4 * frames))
+            self.tables: Dict[str, BlockTable] = {}
         # host-side slot state
         self.pos = np.zeros(n_slots, np.int32)
         self.last_token = np.zeros(n_slots, np.int32)
@@ -101,6 +139,9 @@ class ServeEngine:
         self._n_resumed = 0
         self._n_prefills = 0
         self._n_commits = 0
+        self._n_prefix_hits = 0
+        self._n_migrated_in = 0
+        self._n_migrated_out = 0
 
     # -- request intake ------------------------------------------------------
     def submit(self, requests: Sequence[Request]):
@@ -109,7 +150,8 @@ class ServeEngine:
             assert len(r.prompt) + r.max_new_tokens <= self.t_max, \
                 (r.rid, len(r.prompt), r.max_new_tokens, self.t_max)
             if r.rid in self.sessions or r.rid in self.results:
-                continue    # recovered, resuming, or retired-done — skip
+                continue    # recovered, resuming, migrated, or retired —
+                #             this engine already accounts for the rid
             fresh.append(r)
         self.sched.submit(fresh)
 
@@ -118,18 +160,31 @@ class ServeEngine:
         """Recover the newest session commit from the pool.  Finished
         sessions become results; unfinished ones are queued for admission
         AHEAD of any fresh request (they were admitted first in the killed
-        incarnation).  Returns the recovered tick or None (cold pool)."""
+        incarnation).  Sessions handed off to another engine stay as
+        tombstones: ``submit`` skips them and the adopting engine (or the
+        fleet resume) serves them.  Returns the recovered tick or None
+        (cold pool)."""
         if self.store is None:
             return None
-        rec = self.store.recover(self.kv.template1)
+        rec = self.store.recover(self.kv.template1,
+                                 pager=self.pager if self.paged else None)
         if rec is None:
             return None
         for rid, s in rec.sessions.items():
             self.sessions[rid] = s
+            if s.migrated_to is not None:
+                # owned by the target engine; keep the handoff table so
+                # the fleet resume can finish an interrupted adoption
+                self._handoffs[rid] = rec.tables.get(rid)
+                continue
             if s.done:
                 self.results[rid] = list(s.emitted)
             else:
                 self._resume_cache[rid] = rec.caches.get(rid)
+                if self.paged and rid in rec.tables:
+                    self.tables[rid] = rec.tables[rid]
+                    for bid in rec.tables[rid].bids():
+                        self.allocator.adopt(bid)
                 self._n_resumed += 1
                 self.sched.submit([Request(rid, s.prompt,
                                            s.max_new_tokens)])
@@ -138,19 +193,29 @@ class ServeEngine:
         return rec.step
 
     # -- the continuous-batching loop ---------------------------------------
+    def tick(self):
+        """One scheduler round: admit, decode, commit-on-cadence.  The
+        unit a fleet controller interleaves across engines."""
+        for slot, req in self.sched.admit():
+            self._admit(slot, req)
+        if self.sched.n_running:
+            self._decode_tick()
+        self._tick += 1
+        if self.commit_every and self._tick % self.commit_every == 0:
+            self._commit()
+
     def run(self, requests: Optional[Sequence[Request]] = None
             ) -> ServeResult:
         if requests:
             self.submit(requests)
         ticks0 = self._tick
         while not self.sched.done:
-            for slot, req in self.sched.admit():
-                self._admit(slot, req)
-            if self.sched.n_running:
-                self._decode_tick()
-            self._tick += 1
-            if self.commit_every and self._tick % self.commit_every == 0:
-                self._commit()
+            self.tick()
+        return self.finish(ticks0)
+
+    def finish(self, ticks0: int = 0) -> ServeResult:
+        """Final commit + drain, then the result record (split out of
+        ``run`` so a fleet controller can drive ticks itself)."""
         if self.store is not None:
             self._commit()            # final table (all sessions done)
             self.store.drain()
@@ -162,7 +227,10 @@ class ServeEngine:
             mode="continuous",
             resumed_step=self._resumed_step,
             resumed_sessions=self._n_resumed,
-            commits=self._n_commits)
+            commits=self._n_commits,
+            prefix_hits=self._n_prefix_hits,
+            migrated_in=self._n_migrated_in,
+            migrated_out=self._n_migrated_out)
 
     def _admit(self, slot: int, req: Request):
         rid = req.rid
@@ -181,6 +249,8 @@ class ServeEngine:
         else:
             s = Session(rid, tuple(req.prompt), req.max_new_tokens)
             self.sessions[rid] = s
+            if self.prefix_reuse and self._admit_from_prefix(slot, s):
+                return
         tokens = jnp.asarray(np.asarray(s.prompt, np.int32)[None])
         logits, st = self._prefill(self.params, {"tokens": tokens},
                                    self._caches1)
@@ -191,8 +261,38 @@ class ServeEngine:
         self.last_token[slot] = tok0
         self.active[slot] = True
         s.emitted.append(tok0)
+        if self.prefix_reuse:
+            self.store.publish_prefix(self.pager, self.prefix_key,
+                                      s.prompt, st.caches, tok0)
         if len(s.emitted) >= s.max_new_tokens:
             self._finish(rid, slot)
+
+    def _admit_from_prefix(self, slot: int, s: Session) -> bool:
+        """Admission fast path: restore the prompt's shared blocks from
+        the pool instead of prefilling.  Bit-identical to the prefill it
+        replaces — the blocks were published from an identical-weights
+        prefill of the identical prompt."""
+        hit = self.store.load_prefix(self.pager, self.prefix_key, s.prompt)
+        if hit is None:
+            return False
+        blocks, shared, tok0 = hit
+        self.kv.write_slot(slot, self.pager.assemble(blocks))
+        table = BlockTable()
+        for k, (name, entry) in shared.items():
+            # the table references the SHARED objects: carried by name
+            # into this engine's manifests, no bytes copied
+            table.refs[k] = BlockRef(blk=k, bid=self.allocator.alloc(),
+                                     tokens=self.pager.block_tokens,
+                                     name=name, entry=entry)
+        self.tables[s.rid] = table
+        self.pos[slot] = len(s.prompt)
+        self.last_token[slot] = tok0
+        self.active[slot] = True
+        s.emitted.append(tok0)
+        self._n_prefix_hits += 1
+        if len(s.emitted) >= s.max_new_tokens:
+            self._finish(s.rid, slot)
+        return True
 
     def _decode_tick(self):
         next_toks, _, new_caches, new_pos = self._slot_decode(
@@ -218,13 +318,45 @@ class ServeEngine:
         s.done = True
         self.results[rid] = list(s.emitted)
         if self.store is not None:
-            self.store.discard(rid)
+            if self.paged:
+                t = self.tables.pop(rid, None)
+                if t is not None:
+                    for bid in t.bids():
+                        self.allocator.free(bid)
+                self.store.discard_session_blocks(rid)
+            else:
+                self.store.discard(rid)
+
+    def _stage_paged(self, rid: str, cache1: Any):
+        """Stage a running session's DIRTY blocks for the next commit —
+        the O(blocks touched) replacement for whole-lane ``store.stage``."""
+        s = self.sessions[rid]
+        table = self.tables.setdefault(rid, BlockTable())
+        for blk, leaves in self.pager.slice_dirty(cache1, s.pos,
+                                                  table).items():
+            ref = table.refs.get(blk)
+            if ref is None:
+                ref = BlockRef(blk=blk, bid=self.allocator.alloc(),
+                               tokens=0,
+                               name=self.store.block_name(rid, blk))
+                table.refs[blk] = ref
+            if blk != STATE_BLOCK:
+                ref.tokens = self.pager.tokens_in_block(blk, s.pos)
+            self.store.stage_block(s, ref, leaves)
 
     def _commit(self):
         assert self.store is not None
-        for rid, slot in self.sched.running.items():
-            self.store.stage(self.sessions[rid], self.kv.read_slot(slot))
-        self.store.commit(self.sessions, self._tick)
+        if self.paged:
+            for rid, slot in self.sched.running.items():
+                self._stage_paged(rid, self.kv.read_slot(slot))
+            self.store.commit_paged(self.sessions, self.tables,
+                                    self._tick,
+                                    block_tokens=self.block_tokens)
+        else:
+            for rid, slot in self.sched.running.items():
+                self.store.stage(self.sessions[rid],
+                                 self.kv.read_slot(slot))
+            self.store.commit(self.sessions, self._tick)
         self._n_commits += 1
         if self.retire_done:
             # done sessions were durable in the table just committed;
@@ -234,6 +366,76 @@ class ServeEngine:
             # will no longer replay them — the long-lived-service policy.
             for rid in [r for r, s in self.sessions.items() if s.done]:
                 del self.sessions[rid]
+
+    # -- live migration mechanics (driven by serve.fleet) --------------------
+    def begin_migration(self, rid: str):
+        """Freeze an in-flight session: extract its lane and free the
+        slot — freed via MIGRATION, not completion, so the scheduler
+        refills it with the next pending request this very tick."""
+        slot = self.sched.running[rid]
+        cache1 = self.kv.read_slot(slot)
+        self.active[slot] = False
+        self.sched.release(rid)
+        self._n_migrated_out += 1
+        return self.sessions[rid], \
+            self.tables.setdefault(rid, BlockTable()), cache1
+
+    def stage_migration(self, rid: str, cache1: Any, proxy, tag: int
+                        ) -> BlockTable:
+        """mig_stage: LStore the session's dirty blocks (the handoff
+        commit will flush them — the pool arm of staging-or-pool) and
+        RStore each into the TARGET's staging buffer (the hot arm).
+        Clean blocks move zero bytes: the target reads them from the pool
+        entries the block table already carries."""
+        s = self.sessions[rid]
+        table = self.tables[rid]
+        for blk, leaves in self.pager.slice_dirty(cache1, s.pos,
+                                                  table).items():
+            ref = table.refs.get(blk)
+            if ref is None:
+                ref = BlockRef(blk=blk, bid=self.allocator.alloc(),
+                               tokens=0,
+                               name=self.store.block_name(rid, blk))
+                table.refs[blk] = ref
+            if blk != STATE_BLOCK:
+                ref.tokens = self.pager.tokens_in_block(blk, s.pos)
+            self.store.stage_block(s, ref, leaves)
+            self.store.tiers.rstore(ref.name, proxy, tag=tag)
+        return table
+
+    def commit_handoff(self, rid: str, target_id: int):
+        """mig_commit: mark the session migrated and commit — ONE paged
+        commit makes the marker, the block table and the staged dirty
+        blocks durable atomically.  After this manifest lands the target
+        owns the session, crash or no crash."""
+        self.sessions[rid].migrated_to = target_id
+        self._commit()
+
+    def release_migrated(self, rid: str):
+        """mig_release: the target's adoption commit landed — drop our
+        copy.  Frame ids move WITH the table (same pool frames); staged
+        payloads leave the host tier; the tombstone leaves the committed
+        table at our next commit."""
+        self.sessions.pop(rid, None)
+        self.tables.pop(rid, None)
+        self.store.discard_session_blocks(rid)
+
+    def install_session(self, s: Session, table: BlockTable, cache1: Any,
+                        *, claim_frames: bool = False):
+        """Adopt a migrated-in session: re-admit it AHEAD of fresh
+        requests with its cache ready to fast-forward into a lane.
+        ``claim_frames`` re-asserts the table's frame ids in OUR
+        allocator (restart recovery — a live in-process handoff moves
+        already-owned frames of the shared fleet allocator)."""
+        s.migrated_to = None
+        self.sessions[s.rid] = s
+        self.tables[s.rid] = table
+        if claim_frames:
+            for bid in table.bids():
+                self.allocator.adopt(bid)
+        self._resume_cache[s.rid] = cache1
+        self._n_migrated_in += 1
+        self.sched.submit_front(Request(s.rid, s.prompt, s.max_new_tokens))
 
     # -- static baseline -----------------------------------------------------
     def run_static(self, requests: Sequence[Request]) -> ServeResult:
@@ -306,10 +508,17 @@ def build_serve_engine(arch: str = "olmo-1b", *, smoke: bool = True,
                        fault_hook=None, restore_mode: str = "cache",
                        retire_done: bool = False, seed: int = 0,
                        topology: Optional[str] = None,
-                       dsm: Optional["CXL0Config"] = None):
-    """One-stop construction shared by the launcher, the example and the
-    killable scenario worker: config -> bundle -> (sharded) params ->
-    optional durable session store -> engine.  Returns (engine, cfg).
+                       dsm: Optional["CXL0Config"] = None,
+                       engine_id: int = 0,
+                       paged: bool = True,
+                       block_tokens: int = BLOCK_TOKENS,
+                       allocator: Optional[BlockAllocator] = None,
+                       prefix_reuse: bool = False,
+                       bundle=None, params=None):
+    """One-stop construction shared by the launcher, the example, the
+    fleet controller and the killable scenario worker: config -> bundle
+    -> (sharded) params -> optional durable session store -> engine.
+    Returns (engine, cfg).
 
     The durable tier stack is wired from ONE ``CXL0Config``: pass it
     directly via ``dsm`` (the launchers do) or let the legacy kwargs
@@ -319,15 +528,19 @@ def build_serve_engine(arch: str = "olmo-1b", *, smoke: bool = True,
 
     Params are initialized from ``seed`` deterministically, so two
     processes built with the same arguments hold bit-identical weights —
-    the property crash-replay bit-identity rests on."""
+    the property crash-replay bit-identity AND cross-engine prefix reuse
+    rest on (the reuse key folds arch + smoke + seed).  Pass ``bundle``
+    + ``params`` to share ONE weight pytree across engines (how the
+    fleet controller hosts N engines of the same model)."""
     from repro.configs import get_config, get_smoke_config
     from repro.dsm.api import CXL0Config
     from repro.models.registry import build as build_model
 
     cfg = get_smoke_config(arch) if smoke else get_config(arch)
-    bundle = build_model(cfg, dec_pos_len=t_max)
-    key = jax.random.PRNGKey(seed)
-    params = bundle.init_params(key)
+    if bundle is None:
+        bundle = build_model(cfg, dec_pos_len=t_max)
+    if params is None:
+        params = bundle.init_params(jax.random.PRNGKey(seed))
     if ctx is not None and ctx.mesh is not None:
         from repro.train.elastic import shardings_for
         params = jax.tree_util.tree_map(
@@ -341,8 +554,11 @@ def build_serve_engine(arch: str = "olmo-1b", *, smoke: bool = True,
                          n_shards=n_shards, retention=retention,
                          topology=topology, fault_hook=fault_hook)
     if dsm is not None:
-        store = SessionStore(ctx=dsm.open())
-    engine = ServeEngine(bundle, params, n_slots=n_slots, t_max=t_max,
-                         ctx=ctx, store=store, commit_every=commit_every,
-                         restore_mode=restore_mode, retire_done=retire_done)
+        store = SessionStore(ctx=dsm.open(), engine_id=engine_id)
+    engine = ServeEngine(
+        bundle, params, n_slots=n_slots, t_max=t_max, ctx=ctx,
+        store=store, commit_every=commit_every, restore_mode=restore_mode,
+        retire_done=retire_done, paged=paged, block_tokens=block_tokens,
+        allocator=allocator, prefix_reuse=prefix_reuse,
+        prefix_key=f"{arch}|{'smoke' if smoke else 'full'}|s{seed}")
     return engine, cfg

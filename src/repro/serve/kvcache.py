@@ -29,7 +29,16 @@ Cold sessions leave HBM through the CXL0 tiers (``dsm.tiers``):
   cheaper tier — the decision is logged on the policy;
 * ``restore(name, entry=...)``       — best tier first: HBM host object,
   then peer staging, then pool — byte-identical round-trip in all cases
-  (raw-view npz storage preserves bf16 et al. exactly).
+  (streamed ``.cxl0`` frames store each leaf's raw bytes + dtype/shape
+  header, so bf16 et al. survive exactly; see ``dsm.stream``).
+
+This manager moves WHOLE single-sequence caches between tiers.  The
+serving engine's durable path no longer uses that granularity: it
+commits fixed-size token-axis blocks through ``serve.paging`` +
+``SessionStore.commit_paged`` so cold-session state is O(blocks
+touched).  Whole-lane spill/restore stays as the legacy layout
+(``ServeEngine(paged=False)``, equivalence-tested) and as the
+mid-decode HBM-pressure escape hatch.
 """
 from __future__ import annotations
 

@@ -53,6 +53,16 @@ class SlotScheduler:
                 p.rid != r.rid for p in self.pending), f"dup rid {r.rid}"
             self.pending.append(r)
 
+    def submit_front(self, request: Request):
+        """Queue a request AHEAD of everything pending.  Used for
+        migrated-in and crash-resumed sessions: they were admitted first
+        in their previous incarnation, so FIFO fairness (measured over
+        the fleet's lifetime, not one engine's) puts them first here."""
+        assert request.rid not in self.running and all(
+            p.rid != request.rid for p in self.pending), \
+            f"dup rid {request.rid}"
+        self.pending.appendleft(request)
+
     # -- slot side -----------------------------------------------------------
     def free_slots(self) -> List[int]:
         return [i for i, sid in enumerate(self.slots) if sid is None]

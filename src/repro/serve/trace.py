@@ -19,6 +19,7 @@ def synthetic_trace(n_requests: int, *, seed: int = 0,
                     vocab_size: int = 256,
                     prompt_lens: Sequence[int] = (32,),
                     new_tokens: Sequence[int] = (4, 8, 16, 32, 48),
+                    n_prompts: int = 0,
                     ) -> List[Request]:
     """``n_requests`` deterministic requests.
 
@@ -26,13 +27,27 @@ def synthetic_trace(n_requests: int, *, seed: int = 0,
     ``prompt_lens`` gives the uniform-prompt trace the static baseline
     needs (it batches prompts unpadded), while the default ``new_tokens``
     mix is exactly the mixed-output-length workload where one long
-    sequence holds a static batch hostage."""
+    sequence holds a static batch hostage.
+
+    ``n_prompts > 0`` draws only that many DISTINCT prompts (per prompt
+    length) and cycles them — the shared-prefix serving workload where
+    content-addressed prefix reuse (serve.paging) pays: request i and
+    request i + n_prompts*len(prompt_lens) share their prompt exactly."""
     rng = np.random.default_rng(seed)
+    pool: dict = {}
     out: List[Request] = []
     for i in range(n_requests):
         L = int(prompt_lens[i % len(prompt_lens)])
         m = int(new_tokens[i % len(new_tokens)])
-        prompt = tuple(int(t) for t in rng.integers(0, vocab_size, size=L))
+        if n_prompts > 0:
+            slot = (i // len(prompt_lens)) % n_prompts
+            if (L, slot) not in pool:
+                pool[(L, slot)] = tuple(
+                    int(t) for t in rng.integers(0, vocab_size, size=L))
+            prompt = pool[(L, slot)]
+        else:
+            prompt = tuple(int(t)
+                           for t in rng.integers(0, vocab_size, size=L))
         out.append(Request(rid=f"r{i:04d}", prompt=prompt,
                            max_new_tokens=m))
     return out

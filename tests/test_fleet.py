@@ -1,0 +1,166 @@
+"""Fleet serving: N engines over one pool (repro.serve.fleet).
+
+* routing     — every admission is a logged cost decision; the fleet's
+  outputs equal a single engine serving the same trace (bit-identity is
+  batching- and placement-independent);
+* migration   — a live four-phase handoff loses no tokens, and a kill at
+  any phase followed by a fleet restart still finishes the identical
+  token streams, whichever arm (staging or pool) the adoption reads.
+  The full 4-point x {kept, wiped} matrix runs in the scenario runner
+  (``--suite serve --engines 2``); here a reduced in-process matrix
+  keeps tier-1 runtime bounded while covering both staging outcomes on
+  both sides of the ownership transfer;
+* admission   — cost-routed placement balances a backlog across engines.
+"""
+import jax
+import pytest
+
+from repro.serve.fleet import (FleetController, MIGRATION_POINTS)
+from repro.serve.trace import synthetic_trace, trace_t_max
+
+ARCH = "olmo-1b"
+T_KW = dict(prompt_lens=(8,), new_tokens=(4, 8, 12), seed=5)
+N_REQS = 6
+
+
+@pytest.fixture(scope="module")
+def smoke():
+    from repro.configs import get_smoke_config
+    from repro.models.registry import build
+    cfg = get_smoke_config(ARCH)
+    trace = synthetic_trace(N_REQS, vocab_size=cfg.vocab_size, **T_KW)
+    t_max = trace_t_max(trace)
+    bundle = build(cfg, dec_pos_len=t_max)
+    params = bundle.init_params(jax.random.PRNGKey(0))
+    return cfg, bundle, params, trace, t_max
+
+
+@pytest.fixture(scope="module")
+def reference_outputs(smoke):
+    """One engine, no store — the fleet's bit-identity oracle."""
+    from repro.serve.engine import ServeEngine
+    _, bundle, params, trace, t_max = smoke
+    return ServeEngine(bundle, params, n_slots=2,
+                       t_max=t_max).run(trace).outputs
+
+
+def _fleet(smoke, pool, **kw):
+    _, bundle, params, _, t_max = smoke
+    return FleetController(ARCH, pool_path=str(pool), n_engines=2,
+                           n_slots=2, t_max=t_max, commit_every=2,
+                           bundle=bundle, params=params, **kw)
+
+
+def test_fleet_matches_single_engine_and_logs_admissions(
+        smoke, reference_outputs, tmp_path):
+    _, _, _, trace, _ = smoke
+    fl = _fleet(smoke, tmp_path / "pool")
+    res = fl.run(trace, rebalance=False)
+    fl.close()
+    assert res.outputs == reference_outputs
+    admits = fl.policy.decisions_for("admit")
+    assert [d.name for d in admits] == [r.rid for r in trace]
+    # every decision carries both engines' modelled costs and picked the
+    # cheapest (ties to the lowest engine id)
+    for d in admits:
+        assert set(d.costs) == {"e1", "e2"}
+        assert d.costs[d.choice] == min(d.costs.values())
+    # the cost routing actually spread the backlog: both engines served
+    assert all(len(r.outputs) > 0 for r in res.per_engine.values())
+
+
+def test_fleet_live_migration_loses_no_tokens(smoke, reference_outputs,
+                                              tmp_path):
+    """Force one handoff mid-decode: the moved session finishes on the
+    TARGET engine with exactly the tokens the uninterrupted single-engine
+    run emits."""
+    _, _, _, trace, _ = smoke
+    fl = _fleet(smoke, tmp_path / "pool")
+    fl.submit(trace)
+    moved = None
+    while not fl.done:
+        fl.tick(rebalance=False)
+        if moved is None and fl.engines[1]._tick >= 3:
+            src = fl.engines[1]
+            moved = next((r for r in src.sched.admission_order
+                          if r in src.sched.running), None)
+            if moved is not None:
+                fl.migrate(moved, 1, 2)
+    res = fl.finish()
+    fl.close()
+    assert moved is not None
+    assert res.outputs == reference_outputs
+    assert res.migrations == 1
+    assert [p for p, r, *_ in fl.migration_log if r == moved] \
+        == list(MIGRATION_POINTS)
+    # ownership moved: the target delivered the session's tokens
+    assert moved in res.per_engine[2].outputs
+    assert moved not in res.per_engine[1].outputs
+    assert res.per_engine[2].migrated_in == 1
+    assert res.per_engine[1].migrated_out == 1
+
+
+class _Kill(Exception):
+    pass
+
+
+@pytest.mark.parametrize("point,wipe", [
+    ("mig_stage", False),        # pre-handoff: source still owns
+    ("mig_commit", True),        # ownership just moved; staging lost ->
+    #                              the restart adopts from the POOL arm
+    ("mig_adopt", True),         # adoption committed; wipe is a no-op
+    ("mig_release", False),      # source copy still present: tombstone
+])
+def test_fleet_kill_during_migration_bit_identical(
+        smoke, reference_outputs, tmp_path, point, wipe):
+    """Kill the whole fleet right after ``point`` of a live handoff,
+    optionally losing the target's staging buffer, then restart a fresh
+    fleet over the pool: resume() re-establishes exactly-one-owner and
+    the finished token streams equal the uninterrupted run."""
+    _, _, _, trace, _ = smoke
+    pool = tmp_path / "pool"
+
+    def mig_hook(p, rid=None, src=None, dst=None):
+        if p == point:
+            raise _Kill()
+
+    fl = _fleet(smoke, pool, mig_hook=mig_hook)
+    fl.submit(trace)
+    with pytest.raises(_Kill):
+        while not fl.done:
+            fl.tick(rebalance=False)
+            if fl.engines[1]._tick >= 3:
+                rid = next(r for r in fl.engines[1].sched.admission_order
+                           if r in fl.engines[1].sched.running)
+                fl.migrate(rid, 1, 2)
+    # the fleet process is dead: in-memory engines are abandoned, only
+    # the pool directory (manifests + objects + staging) survives
+    fl2 = _fleet(smoke, pool)
+    if wipe:
+        fl2.staging.wipe(2)
+    steps = fl2.resume()
+    assert any(s is not None for s in steps.values())
+    res = fl2.run(trace)
+    fl2.close()
+    assert res.outputs == reference_outputs
+    # exactly-one-owner after recovery: no session is double-served
+    served = [rid for r in res.per_engine.values() for rid in r.outputs]
+    assert len(served) == len(set(served)) == len(trace)
+
+
+def test_fleet_restart_is_idempotent_after_clean_run(smoke, tmp_path,
+                                                     reference_outputs):
+    """Resuming over a COMPLETED fleet pool returns every output from
+    the committed tables without recomputation — and without tripping
+    the handoff completion."""
+    _, _, _, trace, _ = smoke
+    fl = _fleet(smoke, tmp_path / "pool")
+    fl.run(trace, rebalance=False)
+    fl.close()
+    fl2 = _fleet(smoke, tmp_path / "pool")
+    fl2.resume()
+    res = fl2.run(trace)
+    fl2.close()
+    assert res.outputs == reference_outputs
+    assert sum(r.prefills for r in res.per_engine.values()) == 0
+    assert sum(r.decode_ticks for r in res.per_engine.values()) == 0

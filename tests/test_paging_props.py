@@ -1,0 +1,120 @@
+"""Property-based tests of the paging invariants (hypothesis).
+
+Deterministic seeded equivalents of every property here run in
+tests/test_paging.py, so the invariants stay covered on machines where
+hypothesis is not installed.
+"""
+import json
+
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property-based tests need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.serve.paging import (BlockAllocator, BlockRef, BlockTable,
+                                OutOfBlocksError, STATE_BLOCK)
+from repro.serve.scheduler import Request, SlotScheduler
+
+
+@settings(deadline=None, max_examples=60)
+@given(st.integers(2, 32),
+       st.lists(st.tuples(st.integers(0, 2), st.integers(0, 31)),
+                max_size=200))
+def test_allocator_single_ownership(n, ops):
+    """alloc/free/adopt in any order never double-assign a frame and
+    never lose one: owned ∪ free is always the whole pool."""
+    a = BlockAllocator(n)
+    held = set()
+    for op, arg in ops:
+        if op == 0:
+            if held == set(range(n)):
+                with pytest.raises(OutOfBlocksError):
+                    a.alloc()
+            else:
+                bid = a.alloc()
+                assert bid not in held
+                held.add(bid)
+        elif op == 1:
+            bid = arg % n
+            if bid in held:
+                a.free(bid)
+                held.discard(bid)
+            else:
+                with pytest.raises(ValueError):
+                    a.free(bid)
+        else:
+            bid = arg % n
+            if bid in held:
+                with pytest.raises(OutOfBlocksError):
+                    a.adopt(bid)
+            else:
+                a.adopt(bid)
+                held.add(bid)
+        assert a.allocated == frozenset(held)
+        assert a.n_free == n - len(held)
+
+
+_refs = st.lists(
+    st.tuples(st.integers(0, 63), st.integers(0, 255), st.integers(0, 64),
+              st.booleans()),
+    max_size=12, unique_by=lambda t: t[0])
+
+
+@settings(deadline=None, max_examples=60)
+@given(_refs, st.booleans())
+def test_block_table_roundtrip_bit_identical(rows, with_state):
+    """to_meta -> json -> from_meta -> to_meta is the identity — the
+    table rides in manifest meta, so a json round-trip IS a commit."""
+    t = BlockTable()
+    for blk, bid, tokens, durable in rows:
+        t.refs[blk] = BlockRef(
+            blk=blk, bid=bid, tokens=tokens, name=f"kv/r/b{blk}",
+            entry={"name": f"kv/r/b{blk}", "version": bid + 1,
+                   "crc": tokens} if durable else None)
+    if with_state:
+        t.refs[STATE_BLOCK] = BlockRef(blk=STATE_BLOCK, bid=999, tokens=0,
+                                       name="kv/r/state")
+    back = BlockTable.from_meta(json.loads(json.dumps(t.to_meta())))
+    assert back.to_meta() == t.to_meta()
+    assert sorted(back.bids()) == sorted(t.bids())
+    assert back.entries() == t.entries()
+
+
+@settings(deadline=None, max_examples=60)
+@given(st.integers(1, 4), st.integers(1, 12),
+       st.lists(st.integers(0, 3), max_size=24))
+def test_fifo_fairness_when_slots_free_via_migration(n_slots, n_reqs,
+                                                     moves):
+    """Interleaving migrations (release without completion, re-entry via
+    submit_front) with completions never lets a fresh request overtake an
+    earlier one: first admissions are in submission order, and a
+    migrated-in session is re-admitted before anything still pending."""
+    s = SlotScheduler(n_slots)
+    s.submit([Request(f"r{i}", (1,), 2) for i in range(n_reqs)])
+    s.admit()
+    out = []
+    mi = 0
+    while not s.done:
+        running = list(s.running)
+        if moves and mi < len(moves) and running:
+            victim = running[moves[mi] % len(running)]
+            mi += 1
+            s.release(victim)                  # migrated out...
+            pending_before = [r.rid for r in s.pending]
+            s.submit_front(Request(victim, (1,), 2))   # ...and back in
+            assert [r.rid for r in s.pending] \
+                == [victim] + pending_before
+            s.admit()
+            continue
+        for rid in running:
+            out.append(rid)
+            s.release(rid)
+        s.admit()
+    # every request ran exactly once, and FIRST admissions are in exact
+    # submission order: a migrated re-entry (submit_front) is a rid that
+    # was already admitted, so it can never let a fresh request overtake
+    # an earlier one
+    assert sorted(out) == sorted(f"r{i}" for i in range(n_reqs))
+    first_seen = list(dict.fromkeys(s.admission_order))
+    assert first_seen == [f"r{i}" for i in range(n_reqs)]
