@@ -15,6 +15,15 @@ import os
 import sys
 import time
 
+# the mesh bench sections need 8 host devices; the flag only works if it
+# is in the environment before ANY bench module first imports jax, i.e.
+# right here (an externally pinned force is left untouched)
+if "xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8"
+                               ).strip()
+
 # run.py is invoked as a script (``python benchmarks/run.py``): put the
 # repo root on the path so ``benchmarks`` resolves as a package and the
 # bench modules share one harness import

@@ -91,6 +91,11 @@ class CXL0Config:
     peers: Tuple[Any, ...] = ()
     replicate_to: Optional[Any] = None
     placement: Optional[Any] = None           # PlacementPolicy override
+    #: a jax ``Mesh`` makes the sharded schedules device-native: shard
+    #: pipelines consume per-device buffers directly (no host gather of
+    #: the full tree), counts/pricing derive from the device layout.  A
+    #: live object — excluded from ``to_dict`` round-trips.
+    mesh: Optional[Any] = None
     fault_hook: Optional[Callable[[str, int], None]] = None
     complete_fn: Optional[Callable] = None
 
@@ -326,6 +331,7 @@ class CXL0Context:
             retention=config.retention,
             fault_hook=config.fault_hook,
             placement=self.placement,
+            mesh=config.mesh,
             complete_fn=config.complete_fn)
         self.recovery = RecoveryManager(self.pool)
 
@@ -427,6 +433,7 @@ def open_cxl0(path, worker_id: int = 0, *,
               retention: Optional[int] = None,
               peers: Sequence[Any] = (),
               replicate_to: Optional[Any] = None,
+              mesh: Optional[Any] = None,
               fault_hook: Optional[Callable[[str, int], None]] = None,
               complete_fn: Optional[Callable] = None) -> CXL0Context:
     """Open a CXL0 programming-model context over a pool.
@@ -446,6 +453,6 @@ def open_cxl0(path, worker_id: int = 0, *,
         path=path if pool is None else path.path,
         worker_id=worker_id, topology=topology, placement=placement,
         schedule=schedule, n_shards=n_shards, retention=retention,
-        peers=tuple(peers), replicate_to=replicate_to,
+        peers=tuple(peers), replicate_to=replicate_to, mesh=mesh,
         fault_hook=fault_hook, complete_fn=complete_fn)
     return cfg.open(pool=pool)

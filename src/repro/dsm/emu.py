@@ -180,6 +180,28 @@ def sharded_flush_ns(topo: Topology, nbytes: int, n_shards: int) -> float:
             + nbytes / topo.aggregate_bw_gbps(k))
 
 
+def sharded_flush_device_ns(topo: Topology, device_bytes, n_shards: int
+                            ) -> float:
+    """Emulated wall time of a DEVICE-sharded durable flush: the real
+    per-device byte loads (``meshio.per_device_nbytes``) are packed onto
+    ``n_shards`` pipelines largest-first, and the wall time is the
+    heaviest pipeline's transfer at its per-pipeline share of the
+    aggregate bandwidth — skewed device layouts price worse than the
+    balanced-blob model, which is exactly why the placement policy wants
+    the real vector.  Reduces to ``sharded_flush_ns`` when the loads are
+    balanced."""
+    loads = sorted((int(b) for b in device_bytes), reverse=True)
+    if not loads:
+        return sharded_flush_ns(topo, 0, n_shards)
+    k = max(1, min(n_shards, len(loads)))
+    lanes = [0] * k
+    for b in loads:                      # greedy LPT onto the lightest lane
+        lanes[lanes.index(min(lanes))] += b
+    return (_remote_lat(topo, HOST, "rflush")
+            + topo.shard_setup_ns * (k - 1)
+            + max(lanes) / (topo.aggregate_bw_gbps(k) / k))
+
+
 # ---------------------------------------------------------------------------
 # the emulator: a priced-trace recorder
 # ---------------------------------------------------------------------------
@@ -311,10 +333,15 @@ def attach_emulator(tiers, emu: TopologyEmulator):
         return priced
 
     def _shard_assignment(name, n_shards):
-        leaves = [np.asarray(l)
-                  for l in jax.tree_util.tree_leaves(tiers.hbm[name])]
-        return [sum(leaves[i].nbytes for i in idxs) for idxs in
-                partition_leaves([a.nbytes for a in leaves], n_shards)]
+        # metadata-only (leaf ``nbytes``): pricing a device-sharded flush
+        # must not itself gather the tree to host — and a jax leaf's
+        # nbytes equals its gathered nbytes, so the priced assignment is
+        # the same one both flush paths actually write
+        from repro.dsm.meshio import leaf_nbytes
+        sizes = [leaf_nbytes(l)
+                 for l in jax.tree_util.tree_leaves(tiers.hbm[name])]
+        return [sum(sizes[i] for i in idxs) for idxs in
+                partition_leaves(sizes, n_shards)]
 
     def _wrap_sharded(orig):
         @functools.wraps(orig)

@@ -55,6 +55,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 
+from repro.dsm import meshio
 from repro.dsm.tiers import TierManager
 
 COMMIT_MODES = ("sync", "async", "sharded", "sharded-async")
@@ -80,12 +81,16 @@ class CommitStats:
 
 
 def auto_shard_count(total_bytes: int, *,
-                     min_shard_bytes: int = 1 << 20) -> int:
+                     min_shard_bytes: int = 1 << 20,
+                     n_devices: Optional[int] = None) -> int:
     """THE default shard-count heuristic (single source of truth; the
     launcher re-uses it via train/step.py): one flush pipeline per local
     device, capped so no shard falls under ``min_shard_bytes`` — tiny
-    states degrade gracefully to fewer pipelines."""
-    per_device = max(jax.local_device_count(), 1)
+    states degrade gracefully to fewer pipelines.  ``n_devices`` pins the
+    device term to a configured Mesh's size (a mesh-slice rank must size
+    its pipelines from ITS sub-grid, not the whole process's devices)."""
+    per_device = max(n_devices if n_devices is not None
+                     else jax.local_device_count(), 1)
     by_bytes = max(total_bytes // min_shard_bytes, 1)
     return max(1, min(per_device, by_bytes))
 
@@ -97,6 +102,7 @@ class DurableCommitter:
                  retention: Optional[int] = None,
                  fault_hook: Optional[Callable[[str, int], None]] = None,
                  placement: Optional[Any] = None,
+                 mesh: Optional[Any] = None,
                  complete_fn: Optional[
                      Callable[[int, Dict[str, Any], Optional[dict]],
                               int]] = None):
@@ -105,6 +111,15 @@ class DurableCommitter:
             "mode='auto' needs a PlacementPolicy to resolve the schedule"
         self.tiers = tiers
         self.mode = mode
+        #: device-sharded commit: with a ``Mesh`` configured, the sharded
+        #: schedules consume each device's buffer inside its own shard
+        #: pipeline (tiers.rflush_sharded(device_local=True)) — no host
+        #: gather of the full tree — and the shard count is derived from
+        #: the mesh/sharding layout instead of a gathered-pytree balance.
+        #: Shard FILES stay bit-identical to the host-gather path (the
+        #: assignment is computed from the same per-leaf bytes), so
+        #: recovery is format-compatible in both directions.
+        self.mesh = mesh
         #: cost-driven placement (repro.dsm.placement).  When set, the
         #: shard count comes from ``placement.choose_shards`` (sized by
         #: the actual state bytes under the active topology) instead of
@@ -147,13 +162,28 @@ class DurableCommitter:
     def _resolve_shards(self) -> int:
         """Lazy auto shard count: sized from the actual HBM state volume
         at the first sharded flush — by the placement policy's cost model
-        when one is configured, else the device-count heuristic."""
+        when one is configured, else the device-count heuristic.  With a
+        Mesh, the policy prices from the REAL per-device byte loads
+        (``meshio.per_device_nbytes``, metadata-only) and the heuristic's
+        device term is the mesh's device count."""
         if self.n_shards is None:
             total = self._hbm_bytes()
-            self.n_shards = (self.placement.choose_shards(total)
-                             if self.placement is not None
-                             else auto_shard_count(total))
+            if self.placement is not None:
+                device_bytes = (meshio.per_device_nbytes(
+                    dict(self.tiers.hbm)) if self.mesh is not None else None)
+                self.n_shards = self.placement.choose_shards(
+                    total, device_bytes=device_bytes)
+            else:
+                self.n_shards = auto_shard_count(
+                    total, n_devices=(meshio.mesh_device_count(self.mesh)
+                                      if self.mesh is not None else None))
         return self.n_shards
+
+    @property
+    def _device_local(self) -> bool:
+        """Sharded flushes consume device buffers directly iff a Mesh is
+        configured — the host-gather path stays the default."""
+        return self.mesh is not None
 
     def _resolve_mode(self) -> str:
         """``mode="auto"`` defers the schedule choice until the first
@@ -217,7 +247,8 @@ class DurableCommitter:
             if self.mode == "sharded":
                 written[name] = self.tiers.rflush_sharded(
                     name, self._resolve_shards(),
-                    post_first_shard=self._mid_flush_probe(first, step))
+                    post_first_shard=self._mid_flush_probe(first, step),
+                    device_local=self._device_local)
             else:
                 written[name] = self.tiers.rflush(name)
                 if first:
@@ -260,7 +291,8 @@ class DurableCommitter:
         for name in names:
             self.tiers.flush_async_sharded(
                 name, self._resolve_shards(),
-                post_first_shard=self._mid_flush_probe(first, step))
+                post_first_shard=self._mid_flush_probe(first, step),
+                device_local=self._device_local)
             first = False
         self._pending = (step, names, meta)
         return st

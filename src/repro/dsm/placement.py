@@ -46,7 +46,8 @@ import dataclasses
 from typing import Any, Dict, List
 
 from repro.dsm.emu import (Topology, get_topology, rload_pool_ns,
-                           rload_staging_ns, rstore_ns, sharded_flush_ns)
+                           rload_staging_ns, rstore_ns,
+                           sharded_flush_device_ns, sharded_flush_ns)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -122,14 +123,25 @@ class PlacementPolicy:
 
     # -- shard count ---------------------------------------------------------
     def choose_shards(self, nbytes: int, name: str = "state", *,
-                      log: bool = True) -> int:
+                      log: bool = True, device_bytes=None) -> int:
         """Argmin of the modelled sharded-flush wall time.  Candidates stop
         at 2x the link count (beyond that streams only share links and pay
-        setup) capped by ``max_shards``."""
+        setup) capped by ``max_shards``.  ``device_bytes`` (the real
+        per-device byte loads of a mesh-sharded state, from
+        ``meshio.per_device_nbytes``) switches the cost model to
+        ``sharded_flush_device_ns`` — per-candidate costs then reflect
+        the heaviest pipeline under the actual device layout, and the
+        candidate range is additionally capped at the device count (a
+        pipeline with no device buffer to drain buys nothing)."""
         t = self.topology
         hi = max(1, min(self.max_shards, 2 * t.n_links))
-        costs = {k: sharded_flush_ns(t, nbytes, k)
-                 for k in range(1, hi + 1)}
+        if device_bytes is not None:
+            hi = max(1, min(hi, len(device_bytes)))
+            costs = {k: sharded_flush_device_ns(t, device_bytes, k)
+                     for k in range(1, hi + 1)}
+        else:
+            costs = {k: sharded_flush_ns(t, nbytes, k)
+                     for k in range(1, hi + 1)}
         best = min(costs, key=costs.get)
         if log:
             self._log("shards", name, nbytes, best,

@@ -37,7 +37,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
-from repro.dsm import stream
+from repro.dsm import meshio, stream
 from repro.dsm.pool import (DSMPool, PoolObject, ShardedObject,
                             partition_leaves)
 
@@ -73,6 +73,38 @@ class TierManager:
         self._fsync_lane: Optional[ThreadPoolExecutor] = None
         self._arena = stream.SpillArena()   # reusable spill pack buffers
         self._lock = threading.Lock()
+        #: D2H accounting (bytes).  ``d2h_gather_bytes`` counts whole-tree
+        #: host gathers on the legacy flush paths; ``d2h_shard_bytes``
+        #: counts the per-device buffer copies of device-local shard
+        #: pipelines (``meshio.assemble_leaf``).  A device-sharded commit
+        #: must leave ``d2h_gather_bytes`` untouched — the "no host gather
+        #: of the full tree" contract, asserted in tests/test_mesh_commit.
+        self.d2h_gather_bytes = 0
+        self.d2h_shard_bytes = 0
+
+    def _count_d2h(self, kind: str, nbytes: int):
+        with self._lock:
+            if kind == "gather":
+                self.d2h_gather_bytes += int(nbytes)
+            else:
+                self.d2h_shard_bytes += int(nbytes)
+
+    def _to_host_counted(self, tree):
+        """``_to_host`` with D2H accounting: every leaf that is NOT already
+        a host ndarray is gathered whole (the legacy full-tree D2H) and
+        its bytes charged to ``d2h_gather_bytes``."""
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        if all(type(l) is np.ndarray for l in leaves):
+            return tree
+        out = []
+        for l in leaves:
+            if type(l) is np.ndarray:
+                out.append(l)
+            else:
+                a = np.asarray(l)
+                self._count_d2h("gather", a.nbytes)
+                out.append(a)
+        return jax.tree_util.tree_unflatten(treedef, out)
 
     def _get_executor(self, n_workers: int) -> ThreadPoolExecutor:
         """One lazily-created pool of flush pipelines, sized by the first
@@ -144,7 +176,7 @@ class TierManager:
         are read back directly (recovery oracle, rload)."""
         tree = self.hbm[name]
         if not getattr(peer.staging, "materializes_leaves", False):
-            tree = _to_host(tree)
+            tree = self._to_host_counted(tree)
         peer.staging[name] = (self.versions.get(name, 0) if tag is None
                               else tag, tree)
 
@@ -167,8 +199,9 @@ class TierManager:
         """Durable write; returns once the object is on storage."""
         self.flit_counter[name] = self.flit_counter.get(name, 0) + 1
         try:
-            obj = self.pool.write_object(name, self.versions.get(name, 0),
-                                         _to_host(self.hbm[name]))
+            obj = self.pool.write_object(
+                name, self.versions.get(name, 0),
+                self._to_host_counted(self.hbm[name]))
         finally:
             self.flit_counter[name] -= 1
         return obj
@@ -179,28 +212,59 @@ class TierManager:
 
     # -- sharded flush (parallel per-shard RFlush pipelines) -----------------
     def _shard_submit(self, name: str, n_shards: int,
-                      post_first_shard: Optional[Callable] = None
+                      post_first_shard: Optional[Callable] = None,
+                      device_local: bool = False
                       ) -> Tuple[int, int, List[List[int]], List[Future]]:
         """Snapshot the object NOW, partition its leaves into byte-balanced
         shards, and submit one write per shard to the flush pool.  If
         ``post_first_shard`` is given it runs after the FIRST shard is
         durable and before the rest are joined — the mid-flush
-        fault-injection point of the scenario runner."""
+        fault-injection point of the scenario runner.
+
+        ``device_local=True`` (mesh-native commit): the assignment comes
+        from leaf METADATA (``meshio.leaf_nbytes`` — identical bytes to
+        the gathered path, so the assignment and hence every shard file
+        is bit-identical), and each shard is submitted as a THUNK that
+        materializes only its own leaves from their per-device buffers
+        inside that shard's pipeline (``meshio.assemble_leaf``).  The
+        full tree is never gathered on host — ``d2h_gather_bytes`` stays
+        untouched; per-buffer copies land in ``d2h_shard_bytes``.  jax
+        arrays are immutable, so snapshotting by reference here and
+        copying inside the pipeline observes the same value the caller
+        committed."""
         version = self.versions.get(name, 0)
-        leaves = [np.asarray(l) for l in
-                  jax.tree_util.tree_leaves(self.hbm[name])]
-        assignment = partition_leaves([a.nbytes for a in leaves], n_shards)
+        if device_local:
+            tree_leaves = jax.tree_util.tree_leaves(self.hbm[name])
+            sizes = [meshio.leaf_nbytes(l) for l in tree_leaves]
+            assignment = partition_leaves(sizes, n_shards)
+            n_leaves = len(tree_leaves)
+
+            def _shard_thunk(idxs):
+                def thunk():
+                    return [meshio.assemble_leaf(
+                        tree_leaves[i],
+                        lambda nb: self._count_d2h("shard", nb))
+                        for i in idxs]
+                return thunk
+
+            shards = [_shard_thunk(tuple(idxs)) for idxs in assignment]
+        else:
+            leaves = [np.asarray(l) for l in jax.tree_util.tree_leaves(
+                self._to_host_counted(self.hbm[name]))]
+            assignment = partition_leaves(
+                [a.nbytes for a in leaves], n_shards)
+            n_leaves = len(leaves)
+            shards = [[leaves[i] for i in idxs] for idxs in assignment]
         ex = self._get_executor(len(assignment))
         pipelined = self._pool_write_is_stock()
         futs = []
         try:
-            for k, idxs in enumerate(assignment):
-                shard = [leaves[i] for i in idxs]
+            for k, shard in enumerate(shards):
                 if pipelined:
                     futs.append(self._submit_split_phase(
                         ex, f"{name}.s{k}", version, shard))
                 else:
-                    futs.append(ex.submit(self.pool.write_object,
+                    futs.append(ex.submit(self._write_shard,
                                           f"{name}.s{k}", version, shard))
                 if k == 0 and post_first_shard is not None:
                     futs[0].result()
@@ -216,22 +280,32 @@ class TierManager:
                 except Exception:
                     pass
             raise
-        return version, len(leaves), assignment, futs
+        return version, n_leaves, assignment, futs
+
+    def _write_shard(self, name: str, version: int, shard) -> PoolObject:
+        """Write one shard via the pool's (possibly overridden)
+        ``write_object``; a callable shard is a device-local materializer
+        thunk and is resolved HERE, on the shard's own pipeline thread."""
+        arrs = shard() if callable(shard) else shard
+        return self.pool.write_object(name, version, arrs)
 
     def _submit_split_phase(self, ex: ThreadPoolExecutor, name: str,
-                            version: int, leaves: List[np.ndarray]) -> Future:
+                            version: int, leaves) -> Future:
         """Submit one shard write as a two-stage pipeline: the flush pool
         thread serializes + CRCs the frame (``start_write``, no fsync),
         then hands the pending write to the one-thread fsync lane for
         ``finish`` (fsync + atomic rename).  The returned future resolves
         only after the rename — same durability point as a monolithic
         ``write_object`` — but while shard k sits in its fsync, the flush
-        pool is already streaming shard k+1's bytes."""
+        pool is already streaming shard k+1's bytes.  ``leaves`` may be a
+        device-local materializer thunk; it runs on the flush-pool thread
+        so the D2H copies overlap across shard pipelines."""
         out: Future = Future()
 
         def serialize():
             try:
-                pending = self.pool.start_write(name, version, leaves,
+                arrs = leaves() if callable(leaves) else leaves
+                pending = self.pool.start_write(name, version, arrs,
                                                 arena=self._arena)
             except BaseException as e:
                 out.set_exception(e)
@@ -273,19 +347,23 @@ class TierManager:
                              n_leaves, shards, assignment)
 
     def rflush_sharded(self, name: str, n_shards: int,
-                       post_first_shard: Optional[Callable] = None
-                       ) -> ShardedObject:
+                       post_first_shard: Optional[Callable] = None,
+                       device_local: bool = False) -> ShardedObject:
         """Blocking sharded durable write: all shards written in parallel,
-        returns once every shard is on storage."""
+        returns once every shard is on storage.  ``device_local=True``
+        consumes per-device buffers inside each shard pipeline instead of
+        gathering the tree first (see ``_shard_submit``)."""
         self.flit_counter[name] = self.flit_counter.get(name, 0) + 1
         try:
             return self._shard_join(
-                name, *self._shard_submit(name, n_shards, post_first_shard))
+                name, *self._shard_submit(name, n_shards, post_first_shard,
+                                          device_local=device_local))
         finally:
             self.flit_counter[name] -= 1
 
     def flush_async_sharded(self, name: str, n_shards: int,
-                            post_first_shard: Optional[Callable] = None):
+                            post_first_shard: Optional[Callable] = None,
+                            device_local: bool = False):
         """Start a sharded durable write in the background (double-buffered
         commit path); join via flush_wait.  The FliT counter stays raised
         until the join, so a concurrent joiner knows the pool copy may be
@@ -293,7 +371,8 @@ class TierManager:
         self.flit_counter[name] = self.flit_counter.get(name, 0) + 1
         try:
             self._sharded_futures[name] = self._shard_submit(
-                name, n_shards, post_first_shard)
+                name, n_shards, post_first_shard,
+                device_local=device_local)
         except BaseException:
             self.flit_counter[name] -= 1     # nothing tracked -> no join
             raise
@@ -305,7 +384,7 @@ class TierManager:
         concurrent joiner knows the pool copy may be stale."""
         self.flit_counter[name] = self.flit_counter.get(name, 0) + 1
         version = self.versions.get(name, 0)
-        host_copy = _to_host(self.hbm[name])       # snapshot NOW
+        host_copy = self._to_host_counted(self.hbm[name])  # snapshot NOW
 
         def work():
             # a failed write must surface at the join (flush_wait) AND the

@@ -19,10 +19,13 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-try:
+try:  # jax >= 0.6 exposes shard_map at top level
     from jax import shard_map as _shard_map
+    _SHMAP_NO_CHECK = {"check_vma": False}
 except ImportError:  # pragma: no cover
     from jax.experimental.shard_map import shard_map as _shard_map
+    # pre-rename API: the replication check is check_rep, not check_vma
+    _SHMAP_NO_CHECK = {"check_rep": False}
 
 from jax.sharding import PartitionSpec as P
 
@@ -72,17 +75,16 @@ def gpipe_forward(apply_fn: Callable, mesh, stage_axis: str = "stage",
         out0 = jnp.zeros_like(x_mb)
         (buf, out), _ = jax.lax.scan(tick, (buf0, out0),
                                      jnp.arange(n_ticks))
-        # only the last stage holds real outputs; broadcast them
-        out = jax.lax.ppermute(
-            out, stage_axis,
-            [(P_stages - 1, i) for i in range(P_stages)])
-        return out
+        # only the last stage holds real outputs (every other stage's
+        # ``out`` is still zeros), so a psum over the stage axis IS the
+        # broadcast — ppermute can't fan one source out to all
+        return jax.lax.psum(out, stage_axis)
 
     return _shard_map(
         local_fn, mesh=mesh,
         in_specs=(P(stage_axis), P()),
         out_specs=P(),
-        check_vma=False)
+        **_SHMAP_NO_CHECK)
 
 
 def pipeline_bubble_fraction(n_stages: int, n_microbatches: int) -> float:

@@ -65,6 +65,7 @@ from repro.dsm.cluster import (ClusterProtocol, ControlPlane,
                                ScalarReduceBoard, rank_ns, ring_sibling)
 from repro.dsm.flit_runtime import KILL_POINTS
 from repro.dsm.pool import DSMPool, manifest_entry
+from repro.launch.mesh import mesh_device_sets, rank_submesh
 from repro.models.params import ParamDesc
 from repro.scenarios.worker import KILL_EXIT
 from repro.train.elastic import partition_plan, remesh
@@ -108,7 +109,12 @@ class ClusterWorker:
         self.board = ScalarReduceBoard(os.path.join(args.pool, "reduce"))
         self.staging = FileStagingArea(os.path.join(args.pool, "staging"))
         self.names = tensor_names(args.tensors)
-        self.partition = partition_plan(self.names, self.live)
+        # each rank owns a mesh SLICE (contiguous run of the process's
+        # devices, launch.mesh.rank_submesh); the partition plan weights
+        # ranks by their slice's device count so state lands where the
+        # devices are
+        self.partition = partition_plan(self.names, self.live,
+                                        mesh_device_sets(self.live))
         self.tensors = {t: init_tensor(t, args.dim, args.seed)
                         for t in self.names if self.partition[t] == self.rank}
         self.source = SyntheticLMSource(1024)
@@ -224,10 +230,14 @@ class ClusterWorker:
                                        tpl[oname])
             for t, p in params.items():
                 full[t] = {"p": p, "mu": opt[t]["mu"], "nu": opt[t]["nu"]}
-        self.partition = partition_plan(self.names, self.live)
+        self.partition = partition_plan(self.names, self.live,
+                                        mesh_device_sets(self.live))
         mine = {t: full[t] for t in self.names
                 if self.partition[t] == self.rank}
-        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        # adopted tensors are re-placed onto THIS rank's mesh slice — the
+        # survivors' sub-grids re-derived over the shrunken live set, so
+        # the victim's devices are re-adopted rather than idled
+        mesh = rank_submesh(self.rank, self.live)
         descs = {t: {k: ParamDesc(v.shape, (None,) * v.ndim)
                      for k, v in d.items()} for t, d in mine.items()}
         placed, _ = remesh(mine, descs, mesh)
@@ -287,7 +297,8 @@ class ClusterWorker:
             self.step_done = q
         meta = self.proto.meta_for(
             partition=old_partition,
-            next_partition=partition_plan(self.names, live_new),
+            next_partition=partition_plan(self.names, live_new,
+                                          mesh_device_sets(live_new)),
             recovered={"victim": victim, "source": source})
         m = self._flush_and_record(q, extra=vobjs, meta=meta)
         self._repartition(m, old_partition, old_live)
@@ -305,10 +316,11 @@ class ClusterWorker:
         gen_new = self.gen + 1
         self.gen = gen_new
         self.proto.set_membership(gen_new, old_live)   # all ranks record
+        live_new = [r for r in old_live if r != victim]
         meta = self.proto.meta_for(
             partition=old_partition,
-            next_partition=partition_plan(
-                self.names, [r for r in old_live if r != victim]),
+            next_partition=partition_plan(self.names, live_new,
+                                          mesh_device_sets(live_new)),
             planned_shrink={"victim": victim, "at_step": at_step})
         m = self._flush_and_record(q, meta=meta)
         if self.rank == victim:

@@ -80,24 +80,48 @@ class ScenarioResult:
                 and self.final_digest == self.reference_digest)
 
 
-def _worker_env() -> Dict[str, str]:
+def _mesh_devices(mesh: str) -> int:
+    out = 1
+    for d in mesh.lower().split("x"):
+        out *= int(d)
+    return out
+
+
+def _worker_env(n_devices: int = 0) -> Dict[str, str]:
     src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", ".."))
     env = dict(os.environ)
     env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    if n_devices:
+        # the worker builds a real Mesh on CPU: force the host platform to
+        # expose one device per mesh cell BEFORE its jax backend comes up
+        # (an inherited force wins — CI's mesh lane sets it job-wide)
+        flags = env.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            env["XLA_FLAGS"] = ((flags + " ") if flags else "") + \
+                f"--xla_force_host_platform_device_count={n_devices}"
     return env
 
 
 def _run_worker(pool: str, *, steps: int, commit_every: int, mode: str,
                 shards: int, retention: int, kill_point: str, kill_step: int,
-                model: str, timeout: int) -> subprocess.CompletedProcess:
+                model: str, timeout: int, mesh: str = "",
+                topology: str = "",
+                decision_log: str = "") -> subprocess.CompletedProcess:
     cmd = [sys.executable, "-m", "repro.scenarios.worker",
            "--pool", pool, "--steps", str(steps),
            "--commit-every", str(commit_every), "--mode", mode,
            "--shards", str(shards), "--retention", str(retention),
            "--kill-point", kill_point, "--kill-step", str(kill_step),
            "--model", model]
-    return subprocess.run(cmd, env=_worker_env(), capture_output=True,
-                          text=True, timeout=timeout)
+    if mesh:
+        cmd += ["--mesh", mesh]
+    if topology:
+        cmd += ["--topology", topology]
+    if decision_log:
+        cmd += ["--decision-log", decision_log]
+    return subprocess.run(cmd,
+                          env=_worker_env(_mesh_devices(mesh) if mesh else 0),
+                          capture_output=True, text=True, timeout=timeout)
 
 
 def _result_json(proc: subprocess.CompletedProcess) -> dict:
@@ -107,12 +131,17 @@ def _result_json(proc: subprocess.CompletedProcess) -> dict:
 def reference_digest(workdir: str, *, steps: int = 8, commit_every: int = 2,
                      mode: str = "sharded-async", shards: int = 4,
                      retention: int = 0, model: str = "toy",
+                     mesh: str = "", topology: str = "",
                      timeout: int = 600) -> int:
     """Digest of an uninterrupted run with the same configuration."""
-    proc = _run_worker(os.path.join(workdir, "pool_reference"), steps=steps,
+    pool = os.path.join(workdir, "pool_reference")
+    proc = _run_worker(pool, steps=steps,
                        commit_every=commit_every, mode=mode, shards=shards,
                        retention=retention, kill_point="none", kill_step=0,
-                       model=model, timeout=timeout)
+                       model=model, mesh=mesh, topology=topology,
+                       decision_log=(pool + "_decisions.jsonl"
+                                     if topology else ""),
+                       timeout=timeout)
     if proc.returncode != 0:
         raise RuntimeError(f"reference run failed: {proc.stderr[-2000:]}")
     return _result_json(proc)["digest"]
@@ -123,6 +152,7 @@ def run_scenario(kill_point: str, workdir: str, *, steps: int = 8,
                  shards: int = 4, retention: int = 0,
                  kill_step: Optional[int] = None, model: str = "toy",
                  ref_digest: Optional[int] = None,
+                 mesh: str = "", topology: str = "",
                  timeout: int = 600) -> ScenarioResult:
     # a real raise, not an assert: under ``python -O`` an assert silently
     # accepts a bogus kill point and the scenario "passes" vacuously
@@ -138,6 +168,9 @@ def run_scenario(kill_point: str, workdir: str, *, steps: int = 8,
     p1 = _run_worker(pool, steps=steps, commit_every=commit_every, mode=mode,
                      shards=shards, retention=retention,
                      kill_point=kill_point, kill_step=kill_step, model=model,
+                     mesh=mesh, topology=topology,
+                     decision_log=(pool + "_decisions_kill.jsonl"
+                                   if topology else ""),
                      timeout=timeout)
     killed = p1.returncode == KILL_EXIT
     if not killed:
@@ -152,7 +185,11 @@ def run_scenario(kill_point: str, workdir: str, *, steps: int = 8,
     # 3. restart phase: same worker, no kill, resume from the pool
     p2 = _run_worker(pool, steps=steps, commit_every=commit_every, mode=mode,
                      shards=shards, retention=retention, kill_point="none",
-                     kill_step=0, model=model, timeout=timeout)
+                     kill_step=0, model=model,
+                     mesh=mesh, topology=topology,
+                     decision_log=(pool + "_decisions_restart.jsonl"
+                                   if topology else ""),
+                     timeout=timeout)
     if p2.returncode != 0:
         return ScenarioResult(kill_point, True, completed, None, None, None,
                               ref_digest,
@@ -164,7 +201,8 @@ def run_scenario(kill_point: str, workdir: str, *, steps: int = 8,
     if ref_digest is None:
         ref_digest = reference_digest(
             workdir, steps=steps, commit_every=commit_every, mode=mode,
-            shards=shards, retention=retention, model=model, timeout=timeout)
+            shards=shards, retention=retention, model=model,
+            mesh=mesh, topology=topology, timeout=timeout)
     return ScenarioResult(
         kill_point, True, completed, res["resumed_from"],
         (res["recoveries"] or [None])[0], res["digest"], ref_digest)
@@ -432,6 +470,14 @@ def main(argv=None) -> int:
     ap.add_argument("--commit-every", type=int, default=2)
     ap.add_argument("--mode", default="sharded-async")
     ap.add_argument("--shards", type=int, default=4)
+    ap.add_argument("--mesh", default="",
+                    help="train suite: run every worker on a real Mesh "
+                         "(e.g. 2x4) with device-local sharded commits; "
+                         "the runner forces the matching XLA host device "
+                         "count into the worker env, prices shard counts "
+                         "under --topology (default cxl20-switched-pool) "
+                         "and writes the priced-decision JSONL logs next "
+                         "to each pool in --workdir")
     ap.add_argument("--model", default="toy", choices=["toy", "smoke"])
     ap.add_argument("--requests", type=int, default=10,
                     help="serve suite: trace length")
@@ -484,9 +530,19 @@ def main(argv=None) -> int:
 
     def _train_suite():
         nonlocal failed
+        # mesh lane: shard count 0 = auto, so the placement policy prices
+        # it from the real per-device bytes (and logs the decision);
+        # --topology doubles as the pricing preset when it names one
+        topology = ""
+        shards = args.shards
+        if args.mesh:
+            topology = (args.topology if args.topology not in ("", "all")
+                        else "cxl20-switched-pool")
+            shards = 0
         for r in run_suite(workdir, steps=args.steps,
                            commit_every=args.commit_every, mode=args.mode,
-                           shards=args.shards, model=args.model):
+                           shards=shards, model=args.model,
+                           mesh=args.mesh, topology=topology):
             status = "OK" if r.ok else "FAIL"
             failed += not r.ok
             print(f"scenario,{r.kill_point},{status},"

@@ -112,6 +112,19 @@ def main(argv=None) -> int:
                          "commit step is >= this")
     ap.add_argument("--model", default="toy", choices=["toy", "smoke"])
     ap.add_argument("--dim", type=int, default=64)
+    ap.add_argument("--mesh", default="",
+                    help="mesh spec like 2x4: device-shard the toy state "
+                         "on a real (data, model) Mesh and commit "
+                         "device-local (requires the XLA host-device "
+                         "force, e.g. XLA_FLAGS=--xla_force_host_"
+                         "platform_device_count=8)")
+    ap.add_argument("--topology", default="",
+                    help="emulated CXL topology preset: builds a "
+                         "PlacementPolicy so shard counts are priced "
+                         "(with --mesh, from real per-device bytes)")
+    ap.add_argument("--decision-log", default="",
+                    help="write the placement policy's priced decisions "
+                         "as JSONL to this path")
     ap.add_argument("--result", default="", help="also write the result "
                                                  "JSON to this path")
     args = ap.parse_args(argv)
@@ -128,16 +141,52 @@ def main(argv=None) -> int:
         step_fn, state, vocab = make_smoke_model()
     else:
         step_fn, state, vocab = make_toy_step(), make_toy_state(args.dim), 1024
+
+    mesh = None
+    if args.mesh:
+        from jax.sharding import NamedSharding, PartitionSpec
+        from repro.launch.mesh import parse_mesh
+        mesh = parse_mesh(args.mesh)
+        # device-shard the (dim, dim) tensors over the full grid; the
+        # recovered state is put back onto the same layout by the loop's
+        # _restore_placement, so every post-crash commit stays device-local
+        sh = NamedSharding(mesh, PartitionSpec("data", "model"))
+        rep = NamedSharding(mesh, PartitionSpec())
+        put = lambda p: jax.device_put(p, sh)
+        # scalars (opt step, rng, batch) ride replicated — jit rejects a
+        # mixed single-device/mesh argument set
+        state = state._replace(
+            params=jax.tree_util.tree_map(put, state.params),
+            opt=state.opt._replace(
+                mu=jax.tree_util.tree_map(put, state.opt.mu),
+                nu=jax.tree_util.tree_map(put, state.opt.nu),
+                step=jax.device_put(state.opt.step, rep)),
+            rng=jax.device_put(state.rng, rep))
+
     pipe = DataPipeline(SyntheticLMSource(vocab), 4, 32)
     # one wiring path: every CLI knob lands in the unified config and the
     # loop runs over the context it opens
     ctx = CXL0Config(path=args.pool, schedule=args.mode,
-                     n_shards=args.shards,
+                     n_shards=args.shards or None,
                      retention=args.retention or None,
+                     topology=args.topology or None,
+                     mesh=mesh,
                      fault_hook=hook).open()
 
+    to_device = jnp.asarray
+    if mesh is not None:
+        from jax.sharding import NamedSharding, PartitionSpec
+        rep = NamedSharding(mesh, PartitionSpec())
+        to_device = lambda v: jax.device_put(jnp.asarray(v), rep)
     r = run_durable_loop(step_fn, state, pipe, ctx, n_steps=args.steps,
-                         commit_every=args.commit_every, resume=True)
+                         commit_every=args.commit_every, resume=True,
+                         to_device=to_device)
+
+    if args.decision_log and ctx.placement is not None:
+        import dataclasses
+        with open(args.decision_log, "w") as f:
+            for d in ctx.placement.decisions:
+                f.write(json.dumps(dataclasses.asdict(d)) + "\n")
 
     result = {
         "ok": True,
@@ -147,6 +196,10 @@ def main(argv=None) -> int:
         "digest": state_digest(r.state),
         "final_manifest_step": ctx.pool.latest_manifest()["step"],
         "pipeline_step": r.pipeline_state.step,
+        "mesh": args.mesh or None,
+        "n_devices": jax.device_count(),
+        "d2h_gather_bytes": ctx.tiers.d2h_gather_bytes,
+        "d2h_shard_bytes": ctx.tiers.d2h_shard_bytes,
     }
     line = json.dumps(result)
     if args.result:

@@ -115,7 +115,8 @@ class ServeEngine:
 
         self.kv = TieredKVCache(bundle, n_slots, t_max,
                                 tiers=store.tiers if store else None,
-                                placement=getattr(store, "placement", None))
+                                placement=getattr(store, "placement", None),
+                                parallel=ctx)
         self._caches1 = bundle.init_caches(jax.random.PRNGKey(0), 1, t_max)
         self.sched = SlotScheduler(n_slots)
         self.sessions: Dict[str, Session] = {}

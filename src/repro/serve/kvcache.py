@@ -56,17 +56,34 @@ from repro.train.step import cache_batch_axes
 class TieredKVCache:
     def __init__(self, bundle, n_slots: int, t_max: int,
                  tiers: Optional[TierManager] = None,
-                 placement=None):
+                 placement=None, parallel=None):
         self.n_slots = n_slots
         self.t_max = t_max
         self.tiers = tiers
         #: cost-driven spill routing (repro.dsm.placement.PlacementPolicy);
         #: when set, ``spill_auto`` replaces the caller-chosen tier.
         self.placement = placement
+        #: ParallelCtx (parallel.sharding): when its mesh is live, the
+        #: batched KV lanes are device-sharded per the cache descriptors'
+        #: logical axes (heads on the model axis), spill block counts
+        #: default to the mesh's device count, and durable spills run
+        #: device-local (each block pipeline drains its devices' buffers
+        #: — no host gather of the whole lane).
+        self.parallel = parallel
         self.axes = cache_batch_axes(bundle)
         # zero-initialized batched cache (cache descs are init="zeros")
         self.caches = bundle.init_caches(jax.random.PRNGKey(0), n_slots,
                                          t_max)
+        if parallel is not None and getattr(parallel, "mesh", None) \
+                is not None:
+            from repro.models.params import tree_map_descs
+            from repro.parallel.sharding import spec_for
+            shardings = tree_map_descs(
+                lambda d: jax.sharding.NamedSharding(
+                    parallel.mesh, spec_for(parallel, d)),
+                bundle.cache_descs(n_slots, t_max))
+            self.caches = jax.tree_util.tree_map(
+                jax.device_put, self.caches, shardings)
         self._template1 = bundle.abstract_caches(1, t_max)
         tm = jax.tree_util.tree_map
 
@@ -125,7 +142,8 @@ class TieredKVCache:
         t = self._need_tiers()
         self.stage(name, cache1)
         n = n_blocks or len(self.block_layout())
-        obj = t.rflush_sharded(name, n)
+        obj = t.rflush_sharded(name, n,
+                               device_local=self.parallel is not None)
         return manifest_entry(obj)
 
     def spill_auto(self, name: str, cache1: Any, *,
@@ -175,9 +193,17 @@ class TieredKVCache:
     def block_layout(self, n_blocks: Optional[int] = None) -> List[List[int]]:
         """Byte-balanced partition of the per-slot cache leaves into spill
         blocks (``pool.partition_leaves`` — the same layout
-        ``rflush_sharded`` writes).  Default block count: one per local
-        device, clamped by the leaf count."""
+        ``rflush_sharded`` writes).  Default block count: one per device
+        of the configured mesh (else one per local device), clamped by
+        the leaf count."""
         leaves = jax.tree_util.tree_leaves(self._template1)
         nbytes = [int(np.prod(l.shape)) * l.dtype.itemsize for l in leaves]
-        n = n_blocks or max(jax.local_device_count(), 1)
+        mesh = getattr(self.parallel, "mesh", None)
+        if n_blocks:
+            n = n_blocks
+        elif mesh is not None:
+            from repro.dsm.meshio import mesh_device_count
+            n = mesh_device_count(mesh)
+        else:
+            n = max(jax.local_device_count(), 1)
         return partition_leaves(nbytes, n)

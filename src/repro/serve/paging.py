@@ -54,6 +54,8 @@ from typing import Any, Dict, List, Optional, Sequence
 import jax
 import numpy as np
 
+from repro.dsm.meshio import assemble_leaf
+
 BLOCK_TOKENS = 16
 #: ordinal of the recurrent-state pseudo-block (leaves with no token
 #: axis — mamba conv/ssm state, rwkv state).  Always dirty while the
@@ -255,7 +257,11 @@ class BlockPager:
         leaves = jax.tree_util.tree_leaves(cache1)
         assert len(leaves) == len(self._leaves), \
             (len(leaves), len(self._leaves))
-        return [np.asarray(l) for l in leaves]
+        # assemble_leaf copies mesh-sharded lanes per device buffer (and
+        # passes host/unsharded leaves through np.asarray-equivalently),
+        # so paged spills of a device-sharded cache never demand one
+        # monolithic transfer — bit-identical output either way
+        return [assemble_leaf(l) for l in leaves]
 
     def slice_block(self, host: List[np.ndarray], blk: int
                     ) -> List[np.ndarray]:

@@ -55,7 +55,8 @@ def shrink_plan(old_ranks: int, new_ranks: int) -> dict:
     return {r: r % new_ranks for r in range(old_ranks)}
 
 
-def partition_plan(names: Sequence[str], ranks: Sequence[int]
+def partition_plan(names: Sequence[str], ranks: Sequence[int],
+                   device_sets: Optional[Dict[int, Any]] = None
                    ) -> Dict[str, int]:
     """Stable ownership map of named state entries over a rank set — the
     FSDP-style state partition of the cluster protocol
@@ -65,7 +66,26 @@ def partition_plan(names: Sequence[str], ranks: Sequence[int]
     ranks, so every process (and a restarted one) derives the identical
     map from the same membership — no coordinator needed.  On a shrink the
     plan recomputed for the surviving ranks reassigns the victim's entries
-    deterministically."""
+    deterministically.
+
+    ``device_sets`` maps each rank to its mesh-slice weight — a device
+    count, or anything with a ``len`` (a device list, a ``Mesh``'s device
+    array) — and expands the round-robin over per-device SLOTS: a rank
+    owning twice the devices draws twice the entries, so partitions land
+    proportionally on the actual sub-grids (``launch.mesh.rank_submesh``).
+    Every process derives the same plan from the same (live, device_sets)
+    pair; equal weights reduce to the classic per-rank round-robin."""
     ranks = sorted(ranks)
     assert ranks, "partition over an empty rank set"
-    return {n: ranks[i % len(ranks)] for i, n in enumerate(sorted(names))}
+    if device_sets:
+        slots: list = []
+        for r in ranks:
+            w = device_sets.get(r, 1)
+            try:
+                w = len(w)
+            except TypeError:
+                w = int(w)
+            slots.extend([r] * max(1, w))
+    else:
+        slots = ranks
+    return {n: slots[i % len(slots)] for i, n in enumerate(sorted(names))}

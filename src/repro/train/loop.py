@@ -67,6 +67,21 @@ def _state_objects(state: TrainState, pipe_state: PipelineState):
     }
 
 
+def _restore_placement(objs, templates):
+    """Put recovered (host-resident) leaves back onto the device layout the
+    templates carry: a template leaf that is a device-sharded jax array
+    donates its ``sharding``, so a mesh run resumes device-sharded and the
+    NEXT commit can run device-local again.  Host templates pass through —
+    the non-mesh loop is unchanged."""
+    def place(r, t):
+        sh = getattr(t, "sharding", None)
+        if isinstance(t, jax.Array) and sh is not None:
+            return jax.device_put(r, sh)
+        return r
+    return {name: jax.tree_util.tree_map(place, objs[name], templates[name])
+            for name in objs}
+
+
 def _objects_to_state(objs, template: TrainState):
     st = TrainState(
         params=objs["params"],
@@ -106,6 +121,10 @@ def run_durable_loop(
     #                                         window — see flit_runtime
     resume: bool = False,   # recover from the pool before training (process
     #                         restart); skips the initial step -1 commit
+    mesh=None,              # jax Mesh: device-sharded commits (each shard
+    #                         pipeline drains its devices' buffers — no host
+    #                         gather) and recovered leaves are put back onto
+    #                         the template leaf's NamedSharding
     to_device: Callable = jnp.asarray,
 ) -> LoopResult:
     """Run ``n_steps`` with durable commits every ``commit_every`` steps.
@@ -134,7 +153,8 @@ def run_durable_loop(
             pool, worker_id, schedule=commit_mode, n_shards=n_shards,
             retention=retention, placement=placement, peers=peers,
             replicate_to=peers[0] if (replicate and peers) else None,
-            fault_hook=fault_hook)
+            mesh=mesh, fault_hook=fault_hook)
+    mesh = mesh if mesh is not None else getattr(ctx.config, "mesh", None)
     templates = _state_objects(init_state, pipeline.state)
 
     state = init_state
@@ -149,6 +169,8 @@ def run_durable_loop(
     if resume:
         try:
             objs, rec_step, source = ctx.recover(templates)
+            if mesh is not None:
+                objs = _restore_placement(objs, templates)
             state, pipe_state = _objects_to_state(objs, state)
             pipeline.state = pipe_state
             recoveries.append(source)
@@ -204,6 +226,8 @@ def run_durable_loop(
             #                   vanish
             # --- recovery (new worker incarnation) -------------------------
             objs, rec_step, source = ctx.recover(templates)
+            if mesh is not None:
+                objs = _restore_placement(objs, templates)
             state, pipe_state = _objects_to_state(objs, state)
             pipeline.state = pipe_state
             recoveries.append(source)

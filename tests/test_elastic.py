@@ -1,6 +1,6 @@
 """Elastic scaling: recover state from the pool and re-shard onto a
-smaller mesh (8 -> 4 devices).  Runs in a subprocess so the forced device
-count doesn't leak into other tests."""
+smaller mesh (8 -> 4 devices).  Runs in a subprocess; the 8-device host
+force is inherited from the environment (set once in conftest.py)."""
 import json
 import os
 import subprocess
@@ -11,7 +11,6 @@ import pytest
 
 SCRIPT = textwrap.dedent("""
     import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import json
     import numpy as np
     import jax, jax.numpy as jnp

@@ -1,6 +1,6 @@
 """MoE expert parallelism: the shard_map a2a and psum paths must agree with
-the dense oracle. Runs on an 8-device mesh in a subprocess (forced host
-device count must not leak into this process)."""
+the dense oracle. Runs on an 8-device mesh in a subprocess; the host
+device force is inherited from the environment (set in conftest.py)."""
 import json
 import os
 import subprocess
@@ -8,8 +8,6 @@ import sys
 import textwrap
 
 SCRIPT = textwrap.dedent("""
-    import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import json
     import numpy as np
     import jax, jax.numpy as jnp

@@ -18,8 +18,6 @@ from repro.configs import get_smoke_config
 from repro.models.registry import build
 
 SCRIPT = textwrap.dedent("""
-    import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import json
     import jax, jax.numpy as jnp
     from repro.configs import get_smoke_config
@@ -53,7 +51,6 @@ def test_strategies_match_reference():
     env = dict(os.environ,
                PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
                                        "src"))
-    env.pop("XLA_FLAGS", None)
     proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
                           capture_output=True, text=True, timeout=600)
     assert proc.returncode == 0, proc.stderr[-3000:]
