@@ -1,0 +1,94 @@
+"""Elastic autoscaling benchmark: the cost-priced controller vs every
+fixed fleet size under the deterministic bursty diurnal trace
+(``repro.scale.traffic``), per CXL topology preset.
+
+For each preset the SAME trace (one compressed day, seeded Poisson
+arrivals over a diurnal sinusoid with burst trains) is served by
+
+* every **fixed** fleet size ``1..max_engines`` — the baseline family;
+* the **autoscaled** fleet — ``dsm.placement.choose_scale`` pricing
+  hold/grow/shrink each tick with the emulator cost model, joins paying
+  the modelled staged-transfer capital and landing only after the
+  modelled join delay.
+
+Everything is a pure function of (seed, config), so the decision counts
+are bit-deterministic and exact-gated: a refactor that silently stops
+scaling (or starts losing sessions) shows up as a count flip, not just
+as a slower number.  The acceptance criterion — autoscaled beats the
+best fixed size on priced cost AND p99 admission latency with zero lost
+sessions — is gated as a boolean per preset.  Wall-clock throughput is
+reported but ungated.
+"""
+from __future__ import annotations
+
+import time
+
+try:
+    from benchmarks.harness import Bench
+except ImportError:                      # standalone: python benchmarks/...
+    from harness import Bench
+
+SEED = 3
+TOPOLOGIES = ("cxl11-direct", "cxl20-switched-pool", "cxl30-fabric")
+
+
+def main():
+    from repro.scale.autoscaler import (Autoscaler, AutoscaleConfig,
+                                        simulate_autoscale, simulate_fixed)
+    from repro.scale.traffic import TrafficConfig, offered_tokens, \
+        traffic_trace
+
+    trace = traffic_trace(TrafficConfig(seed=SEED))
+
+    bench = Bench("autoscale")
+    bench.set_config(seed=SEED, n_requests=len(trace),
+                     offered_tokens=offered_tokens(trace),
+                     topologies=list(TOPOLOGIES))
+    bench.record("autoscale_trace_requests", len(trace),
+                 "sessions in the compressed day")
+
+    t0 = time.perf_counter()
+    for topo in TOPOLOGIES:
+        cfg = AutoscaleConfig(topology=topo)
+        scaler = Autoscaler(cfg)
+        auto = simulate_autoscale(trace, cfg, scaler=scaler)
+        fixed = {n: simulate_fixed(trace, n, cfg)
+                 for n in range(1, cfg.max_engines + 1)}
+        best_n = min(fixed, key=lambda n: fixed[n].priced_cost_ns)
+        best = fixed[best_n]
+        beats = (auto.priced_cost_ns < best.priced_cost_ns
+                 and auto.p99_admission_ticks < best.p99_admission_ticks
+                 and auto.lost_sessions == 0)
+        bench.record(f"autoscale_beats_best_fixed.{topo}", beats,
+                     f"cost {auto.priced_cost_ns:.3g} < "
+                     f"{best.priced_cost_ns:.3g} (n={best_n}), p99 "
+                     f"{auto.p99_admission_ticks:.0f} < "
+                     f"{best.p99_admission_ticks:.0f}")
+        bench.record(f"autoscale_lost_sessions.{topo}",
+                     auto.lost_sessions, "must be zero")
+        bench.record(f"autoscale_cost_over_best_fixed.{topo}",
+                     auto.priced_cost_ns / best.priced_cost_ns,
+                     "priced cost ratio, lower is better", fmt=".3f")
+        bench.record(f"autoscale_p99_ticks.{topo}",
+                     auto.p99_admission_ticks,
+                     f"vs fixed-{best_n}'s {best.p99_admission_ticks:.0f}")
+        bench.record(f"autoscale_decisions.{topo}", auto.decisions,
+                     "scale decisions logged (all priced alternatives)")
+        bench.record(f"autoscale_grows.{topo}", auto.grows,
+                     "applied scale-out events")
+        bench.record(f"autoscale_shrinks.{topo}", auto.shrinks,
+                     "applied scale-in events")
+        bench.record(f"autoscale_engines_span.{topo}",
+                     f"{auto.engines_min}-{auto.engines_max}",
+                     "capacity range the controller used")
+        bench.record(f"autoscale_tokens_per_tick.{topo}",
+                     auto.tokens_per_tick, "served throughput",
+                     fmt=".2f")
+    dt = time.perf_counter() - t0
+    bench.record("autoscale_sim_wall_s", dt,
+                 "3 presets x (1 auto + 12 fixed) simulations", fmt=".1f")
+    bench.write()
+
+
+if __name__ == "__main__":
+    main()

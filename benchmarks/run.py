@@ -31,9 +31,10 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
 def main() -> None:
-    from benchmarks import (bench_latency, bench_table1, bench_flit,
-                            bench_checkpoint, bench_cluster, bench_fuzz,
-                            bench_model_fuzz, bench_placement, bench_serve)
+    from benchmarks import (bench_autoscale, bench_latency, bench_table1,
+                            bench_flit, bench_checkpoint, bench_cluster,
+                            bench_fuzz, bench_model_fuzz, bench_placement,
+                            bench_serve)
     modules = [
         ("fig5 latency model", bench_latency),
         ("table1 transaction mapping", bench_table1),
@@ -44,6 +45,7 @@ def main() -> None:
         ("vectorized semantics fuzzing", bench_model_fuzz),
         ("adversarial crash fuzzing (end-to-end DSM)", bench_fuzz),
         ("cost-driven placement over emulated topologies", bench_placement),
+        ("elastic autoscaling vs fixed fleets", bench_autoscale),
     ]
     for title, mod in modules:
         print(f"# --- {title} ---", flush=True)

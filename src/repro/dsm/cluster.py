@@ -80,11 +80,18 @@ def ring_sibling(rank: int, live: Sequence[int]) -> int:
 
 class MembershipChange(Exception):
     """Raised out of a blocking rendezvous when the control plane reports a
-    worker death: the caller must run the shrink protocol."""
+    membership change affecting the live set: the caller must run the
+    matching protocol leg (``kind="shrink"`` — a worker died, run the
+    shrink protocol; the grow leg is planned-only and handled at step
+    boundaries, so a raised change is always a death today)."""
 
-    def __init__(self, victim: int):
-        super().__init__(f"worker {victim} left the cluster")
+    def __init__(self, victim: int, kind: str = "shrink"):
+        super().__init__(f"worker {victim} left the cluster"
+                         if kind == "shrink"
+                         else f"worker {victim} membership change ({kind})")
         self.victim = victim
+        self.member = victim
+        self.kind = kind
 
 
 def _atomic_json(path: str, doc: dict, *, fsync: bool = True):
@@ -149,36 +156,75 @@ def _prune_gen_step_dirs(root: str, gen: int, step: int):
 # ---------------------------------------------------------------------------
 
 class ControlPlane:
-    """One shared control file announcing membership changes.
+    """An ordered log of SIGNED membership changes (grow and shrink).
 
-    * planned shrink (elastic scale-down): posted BEFORE the run by the
-      launcher — ``{"victim": v, "at_step": s, "planned": true}``; every
-      rank executes the planned shrink at the top of step ``s``;
-    * crash shrink: posted by the orchestrator AFTER it observes a worker
-      death — ``{"victim": v, "planned": false}``; survivors notice while
-      blocked on the dead rank in a rendezvous.
+    Each posting is one immutable file ``changes/c<idx>.json`` —
+    ``{"idx": i, "kind": "grow"|"shrink", "member": m, "planned": p,
+    "at_step": s}`` — so a planned grow followed by a crash shrink of
+    the very member it admitted never overwrites it (the single-file
+    predecessor could only hold ONE change).  Postings come from the
+    launcher/orchestrator, a single writer by construction, exactly as
+    the legacy ``shrink.json`` did.
+
+    * planned change (elastic scale in either direction): posted BEFORE
+      the step — every rank executes the matching protocol leg at the
+      top of step ``at_step``;
+    * crash shrink: posted by the orchestrator AFTER it observes a
+      worker death (``planned=False``); survivors notice while blocked
+      on the dead rank in a rendezvous (``check_crash``).
+
+    ``post``/``read`` keep the legacy shrink-only shapes for existing
+    callers; new code posts through ``post_change`` and consumes the
+    ordered ``changes()`` list.
     """
 
     def __init__(self, root: str):
         self.root = root
-        os.makedirs(root, exist_ok=True)
-        self.path = os.path.join(root, "shrink.json")
+        self.changes_dir = os.path.join(root, "changes")
+        os.makedirs(self.changes_dir, exist_ok=True)
 
+    def post_change(self, kind: str, member: int, *, planned: bool = False,
+                    at_step: Optional[int] = None) -> dict:
+        assert kind in ("grow", "shrink"), kind
+        assert kind == "shrink" or planned, "grow changes are planned-only"
+        idx = len(self.changes())
+        doc = {"idx": idx, "kind": kind, "member": int(member),
+               "planned": bool(planned), "at_step": at_step}
+        _atomic_json(os.path.join(self.changes_dir, f"c{idx:04d}.json"), doc)
+        return doc
+
+    def changes(self) -> list:
+        """Every posted change, oldest first."""
+        out = []
+        for fn in sorted(os.listdir(self.changes_dir)):
+            if fn.startswith("c") and fn.endswith(".json"):
+                doc = _read_json(os.path.join(self.changes_dir, fn))
+                if doc is not None:
+                    out.append(doc)
+        return out
+
+    # -- legacy shrink-only shapes -------------------------------------------
     def post(self, victim: int, *, planned: bool = False,
              at_step: Optional[int] = None):
-        _atomic_json(self.path, {"victim": victim, "planned": planned,
-                                 "at_step": at_step})
+        self.post_change("shrink", victim, planned=planned, at_step=at_step)
 
     def read(self) -> Optional[dict]:
-        return _read_json(self.path)
+        """Newest change in the legacy single-doc shape (plus ``kind``)."""
+        ch = self.changes()
+        if not ch:
+            return None
+        d = ch[-1]
+        return {"victim": d["member"], "planned": d["planned"],
+                "at_step": d["at_step"], "kind": d["kind"]}
 
     def check_crash(self, live: Sequence[int]):
-        """Raise MembershipChange if a CRASH shrink affecting ``live`` has
-        been posted (planned shrinks are handled at step boundaries, not
-        mid-rendezvous)."""
-        doc = self.read()
-        if doc and not doc.get("planned") and doc["victim"] in live:
-            raise MembershipChange(doc["victim"])
+        """Raise MembershipChange if a CRASH change affecting ``live`` has
+        been posted (planned changes are handled at step boundaries, not
+        mid-rendezvous).  A change whose member already left ``live`` is
+        spent and never re-raises."""
+        for d in self.changes():
+            if not d["planned"] and d["member"] in live:
+                raise MembershipChange(d["member"], d.get("kind", "shrink"))
 
     # shrink rendezvous: the adopter publishes the recovery decision ------
     def post_shrink_result(self, gen: int, doc: dict):

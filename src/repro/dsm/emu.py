@@ -202,6 +202,20 @@ def sharded_flush_device_ns(topo: Topology, device_bytes, n_shards: int
             + max(lanes) / (topo.aggregate_bw_gbps(k) / k))
 
 
+def join_transfer_ns(topo: Topology, nbytes: int, n_shards: int = 1
+                     ) -> float:
+    """Emulated cost of a grow-by-repartition join moving ``nbytes`` of
+    state to the joiner: the survivors RStore the joiner's partition into
+    its staging buffer, the joiner reads it back, and the gen+1 manifest
+    re-flushes the moved objects durably under the new owner.  This is
+    the capital cost an autoscale grow decision pays up front — cheap on
+    fabric (GFAM staging bandwidth), expensive over a 1.1 direct link —
+    which is exactly why scale decisions must flip per preset."""
+    return (rstore_ns(topo, nbytes)
+            + rload_staging_ns(topo, nbytes)
+            + sharded_flush_ns(topo, nbytes, n_shards))
+
+
 # ---------------------------------------------------------------------------
 # the emulator: a priced-trace recorder
 # ---------------------------------------------------------------------------

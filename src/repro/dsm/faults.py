@@ -46,6 +46,14 @@ from repro.dsm.flit_runtime import KILL_POINTS
 from repro.dsm.pool import DSMPool
 from repro.dsm.recovery import CrashError
 
+#: phase boundaries of the grow-by-repartition join protocol
+#: (scenarios/cluster_worker.py, scale suite).  After ``join_staged`` the
+#: joiner's partition sits in its staging buffer; after ``join_committed``
+#: the gen+1 manifest is elected; after ``join_adopted`` every rank runs
+#: the new membership.  A kill at any of them must recover to either the
+#: old or the new membership bit-identically — never a torn one.
+JOIN_POINTS = ("join_staged", "join_committed", "join_adopted")
+
 #: the primitive vocabulary a kill can target (async/sharded flush
 #: variants count as ``rflush``; ``completeOp`` is the manifest commit)
 PRIMITIVES = ("lstore", "rstore", "rflush", "mstore", "completeOp")
@@ -104,7 +112,8 @@ class KillSpec:
             raise ValueError("KillSpec needs exactly one of op= / point=")
         if self.op is not None and self.op not in PRIMITIVES + ("any",):
             raise ValueError(f"unknown op {self.op!r}")
-        if self.point is not None and self.point not in KILL_POINTS:
+        if (self.point is not None
+                and self.point not in KILL_POINTS + JOIN_POINTS):
             raise ValueError(f"unknown point {self.point!r}")
         if self.phase not in ("before", "after"):
             raise ValueError(f"phase must be before/after, got {self.phase!r}")

@@ -38,15 +38,19 @@ Wiring (each opt-in, defaults unchanged):
   (which engine serves a new request: queue-depth decode latency plus
   prefill replay vs pool block restore when a shared prefix is
   reusable) and ``choose_migration`` (is rebalancing an in-flight
-  session worth the RStore+adopt traffic vs staying put).
+  session worth the RStore+adopt traffic vs staying put);
+* the autoscaler (``scale.autoscaler``) prices ``choose_scale``
+  (hold / grow / shrink the fleet: join capital — staged state transfer
+  + gen+1 re-flush — vs the projected queueing cost over the decision
+  window), so capacity follows demand per topology preset.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Any, Dict, List
 
-from repro.dsm.emu import (Topology, get_topology, rload_pool_ns,
-                           rload_staging_ns, rstore_ns,
+from repro.dsm.emu import (Topology, get_topology, join_transfer_ns,
+                           rload_pool_ns, rload_staging_ns, rstore_ns,
                            sharded_flush_device_ns, sharded_flush_ns)
 
 
@@ -56,6 +60,7 @@ class Decision:
     and the modelled cost of every alternative (ns) — so tests and the
     bench can assert WHY, not just what."""
     # "spill" | "shards" | "schedule" | "staging" | "admit" | "migrate"
+    # | "scale"
     kind: str
     name: str
     nbytes: int
@@ -210,6 +215,82 @@ class PlacementPolicy:
         costs = self.migration_costs(nbytes, imbalance)
         choice = costs["move"] < costs["stay"]
         self._log("migrate", rid, nbytes, choice, costs)
+        return choice
+
+    # -- fleet scaling -------------------------------------------------------
+    def _queue_wait_ns(self, queue_depth: int, lanes: int,
+                       session_ticks: float) -> float:
+        """Total modelled wait of a ``queue_depth``-deep FIFO draining
+        through ``lanes`` decode lanes: a lane is HELD for a whole
+        session (~``session_ticks`` ticks), so the drain rate is
+        lanes/session_ticks sessions per tick and the i-th queued
+        session waits ~i*session_ticks/lanes ticks — summing to
+        Q(Q+1)/2 * session_ticks/lanes ticks of wait."""
+        if lanes <= 0:
+            return float("inf")
+        q = max(0, queue_depth)
+        return (q * (q + 1) / 2.0 * session_ticks / lanes
+                * self.decode_tick_ns)
+
+    def scale_costs(self, queue_depth: int, n_engines: int,
+                    slots_per_engine: int, state_nbytes: int, *,
+                    busy_lanes: int = 0,
+                    session_ticks: float = 16.0,
+                    session_nbytes: int = 0,
+                    window_ticks: int = 32,
+                    engine_tick_ns: float = 2e5,
+                    min_engines: int = 1,
+                    max_engines: int = 8) -> Dict[str, float]:
+        """Modelled ns of each scale action over the next decision window.
+        Every alternative pays capacity rent (engines x ``engine_tick_ns``
+        x window) plus the projected queue wait at the resulting lane
+        count; ``grow`` additionally pays the join capital — the staged
+        state transfer + re-flush (``emu.join_transfer_ns``) — and
+        ``shrink`` pays draining a closing engine's live sessions to
+        peers (RStore + adoption read per slot) AND the wait of the load
+        the lost lanes displace (``busy_lanes`` — shrinking a busy fleet
+        queues what no longer fits).  The controller scales out only
+        when the queueing relief beats the join capital within the
+        window — the inequality documented in ARCHITECTURE §12."""
+        t = self.topology
+        lanes = n_engines * slots_per_engine
+        rent = engine_tick_ns * window_ticks
+        wait = lambda q, l: self._queue_wait_ns(q, l, session_ticks)
+        costs = {"hold": wait(queue_depth, lanes) + n_engines * rent}
+        if n_engines < max_engines:
+            k = self.choose_shards(state_nbytes, log=False)
+            costs["grow"] = (join_transfer_ns(t, state_nbytes, k)
+                            + wait(queue_depth, lanes + slots_per_engine)
+                            + (n_engines + 1) * rent)
+        if n_engines > min_engines:
+            drain = slots_per_engine * (rstore_ns(t, session_nbytes)
+                                        + rload_staging_ns(t, session_nbytes))
+            lanes_after = lanes - slots_per_engine
+            displaced = queue_depth + max(0, busy_lanes - lanes_after)
+            costs["shrink"] = (drain + wait(displaced, lanes_after)
+                              + (n_engines - 1) * rent)
+        return costs
+
+    def choose_scale(self, name: str, queue_depth: int, n_engines: int,
+                     slots_per_engine: int, state_nbytes: int, *,
+                     busy_lanes: int = 0, session_ticks: float = 16.0,
+                     session_nbytes: int = 0, window_ticks: int = 32,
+                     engine_tick_ns: float = 2e5, min_engines: int = 1,
+                     max_engines: int = 8) -> str:
+        """Pick hold / grow / shrink for the fleet (ties break to
+        ``hold`` — scaling must strictly pay for itself).  Logged as
+        ``scale`` with every priced alternative, so the decision log
+        shows WHY capacity moved, per topology."""
+        costs = self.scale_costs(
+            queue_depth, n_engines, slots_per_engine, state_nbytes,
+            busy_lanes=busy_lanes, session_ticks=session_ticks,
+            session_nbytes=session_nbytes, window_ticks=window_ticks,
+            engine_tick_ns=engine_tick_ns, min_engines=min_engines,
+            max_engines=max_engines)
+        choice = min(sorted(costs), key=lambda a: (costs[a], a != "hold"))
+        if costs[choice] >= costs["hold"]:
+            choice = "hold"
+        self._log("scale", name, state_nbytes, choice, costs)
         return choice
 
 

@@ -1,0 +1,28 @@
+"""Elastic scaling: grow-by-repartition, synthetic traffic, autoscaling.
+
+The cluster could only *shrink* (on failure or by plan) and nothing ever
+*decided* to scale.  This package closes the loop in three parts:
+
+* ``scale.traffic`` — deterministic diurnal x bursty session arrival
+  processes layered on ``serve/trace.py``'s pure-function contract, so
+  killed-and-restarted workers regenerate the same offered load;
+* ``scale.autoscaler`` — a controller that watches queue depth /
+  admission latency / occupancy and prices "add/remove an engine" with
+  the same ``dsm/emu.py`` cost model that prices spills, emitting logged
+  ``Decision``s through ``dsm/placement.py``;
+* ``scale.grow`` — helpers for the grow-by-repartition join protocol
+  (scenarios/cluster_worker.py): which tensors move to a joiner, and
+  the join kill-point constants.
+"""
+from repro.scale.autoscaler import (Autoscaler, AutoscaleConfig,
+                                    ScaleEvent, SimResult,
+                                    simulate_autoscale, simulate_fixed)
+from repro.scale.grow import JOIN_POINTS, join_moves, join_templates
+from repro.scale.traffic import TrafficConfig, arrival_counts, traffic_trace
+
+__all__ = [
+    "Autoscaler", "AutoscaleConfig", "ScaleEvent", "SimResult",
+    "simulate_autoscale", "simulate_fixed",
+    "JOIN_POINTS", "join_moves", "join_templates",
+    "TrafficConfig", "arrival_counts", "traffic_trace",
+]

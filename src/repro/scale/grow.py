@@ -1,0 +1,62 @@
+"""Grow-by-repartition helpers: what moves to a joiner, and where.
+
+The join protocol (``scenarios/cluster_worker.py``) is three phases —
+
+1. **staged** — every old rank RStores the entries the new partition
+   assigns to the joiner into the JOINER's staging buffer (under the
+   ``join/<name>`` namespace, tagged with the pre-join step ``q``);
+2. **committed** — the old ranks flush their state at ``q`` under the
+   OLD partition and elect ONE gen+1 cluster manifest whose meta names
+   the joiner (``join={"member": j, "at_step": s}``) and carries both
+   partitions;
+3. **adopted** — everyone (joiner included) switches to the new
+   membership: the joiner installs its partition staging-first
+   (pool-fallback through the manifest's old-partition meta), survivors
+   re-lay their mesh slices (``launch.mesh.rank_submesh``).
+
+A kill at any phase boundary (``dsm.faults.JOIN_POINTS``) must recover
+to either the old or the new membership bit-identically: before the
+manifest the grow simply never happened; after it, the joiner's state
+is derivable from the manifest alone (its staging buffer is a volatile
+copy, by the CXL0 cache-loss contract).
+
+These helpers are pure functions of the two partition plans, so every
+process — old rank, joiner, a replay — derives the identical move set
+with no coordinator.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import numpy as np
+
+from repro.dsm.faults import JOIN_POINTS           # noqa: F401  (re-export)
+from repro.train.elastic import plan_delta
+
+#: staging namespace of entries in flight to a joiner — disjoint from the
+#: ``w<i>/`` rank namespaces, so a join in progress can never shadow a
+#: rank's own ring-staged copies
+JOIN_NS = "join"
+
+
+def join_name(tensor: str) -> str:
+    return f"{JOIN_NS}/{tensor}"
+
+
+def join_moves(old_partition: Dict[str, int], new_partition: Dict[str, int],
+               joiner: int) -> Dict[str, int]:
+    """``{tensor: old_owner}`` for every entry the new partition assigns
+    to ``joiner`` — the transfer set each old rank filters by ownership
+    to know what IT must stage."""
+    return {n: src for n, (src, dst) in
+            plan_delta(old_partition, new_partition).items()
+            if dst == joiner}
+
+
+def join_templates(moves: Dict[str, int], dim: int) -> Dict[str, Any]:
+    """Pytree prototypes of the staged join entries, in the cluster toy
+    state format ({p, mu, nu} per tensor, see
+    ``scenarios.cluster_worker.init_tensor``)."""
+    z = lambda: np.zeros((dim, dim), np.float32)
+    return {join_name(t): {"p": z(), "mu": z(), "nu": z()}
+            for t in sorted(moves)}

@@ -47,10 +47,13 @@ def spawn_worker(pool: str, rank: int, world: int, *, steps: int,
                  kill_point: str = "none", kill_step: int = 0,
                  dim: int = 16, tensors: int = 6, global_batch: int = 6,
                  retention: int = 0, topology: str = None,
+                 joiner: bool = False, join_at: int = 0,
                  timeout: float = 120.0) -> subprocess.Popen:
     """THE cluster_worker command builder — shared by the scenario suite,
-    the N-worker launcher and the cluster benchmark so a new worker flag
-    is threaded through in one place."""
+    the N-worker launcher, the scale suite and the cluster benchmark so a
+    new worker flag is threaded through in one place.  ``joiner=True``
+    spawns a rank OUTSIDE ``world`` that grows the cluster at
+    ``join_at`` (the launcher must also post the planned grow change)."""
     cmd = [sys.executable, "-m", "repro.scenarios.cluster_worker",
            "--pool", pool, "--rank", str(rank), "--world", str(world),
            "--steps", str(steps), "--commit-every", str(commit_every),
@@ -62,6 +65,8 @@ def spawn_worker(pool: str, rank: int, world: int, *, steps: int,
            "--kill-point", kill_point, "--kill-step", str(kill_step)]
     if topology:
         cmd += ["--topology", topology]
+    if joiner:
+        cmd += ["--joiner", "--join-at", str(join_at)]
     return subprocess.Popen(cmd, env=_worker_env(),
                             stdout=subprocess.PIPE,
                             stderr=subprocess.PIPE, text=True)

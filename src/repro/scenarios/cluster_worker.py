@@ -42,6 +42,18 @@ A planned shrink (``--shrink-at``, posted as a planned control entry by
 the launcher) runs steps 3-4 with the departing rank still alive — the
 reference run every kill scenario must match bit-for-bit.
 
+A planned GROW (posted as a ``kind="grow"`` control change; the joiner
+process runs with ``--joiner --join-at s``) is the inverse: old ranks
+stage the joiner's new partition into its buffer, elect ONE gen+1 join
+manifest at ``s - 1`` under the old partition, and repartition over the
+grown live set; the joiner observes each phase and adopts staging-first
+with pool fallback.  ``--kill-point join_staged|join_committed|
+join_adopted`` arms the three join-phase boundaries
+(``dsm.faults.JOIN_POINTS``); killing the joiner there must take the
+survivors back to the old membership bit-identically (the crash shrink
+recovers the joiner's entries through the join manifest's partition
+meta, since the joiner never committed under its own namespace).
+
     PYTHONPATH=src python -m repro.scenarios.cluster_worker --pool /tmp/p \
         --rank 1 --world 3 --kill-point mid_flush --kill-step 3
 """
@@ -51,6 +63,7 @@ import argparse
 import json
 import os
 import sys
+import time
 import zlib
 from typing import Any, Dict, List, Optional
 
@@ -60,13 +73,16 @@ import jax
 
 from repro.data.pipeline import SyntheticLMSource, shard_plan
 from repro.dsm.api import open_cxl0
-from repro.dsm.cluster import (ClusterProtocol, ControlPlane,
+from repro.dsm.cluster import (POLL_S, ClusterProtocol, ControlPlane,
                                FileStagingArea, MembershipChange,
                                ScalarReduceBoard, rank_ns, ring_sibling)
+from repro.dsm.faults import JOIN_POINTS
 from repro.dsm.flit_runtime import KILL_POINTS
 from repro.dsm.pool import DSMPool, manifest_entry
+from repro.dsm.recovery import ColdStartError
 from repro.launch.mesh import mesh_device_sets, rank_submesh
 from repro.models.params import ParamDesc
+from repro.scale.grow import join_moves, join_name, join_templates
 from repro.scenarios.worker import KILL_EXIT
 from repro.train.elastic import partition_plan, remesh
 
@@ -102,8 +118,16 @@ class ClusterWorker:
     def __init__(self, args, fault_hook=None):
         self.args = args
         self.rank = args.rank
+        self.fault_hook = fault_hook
+        # --world is always the ORIGINAL world; a joiner's rank is outside
+        # it and enters the live set only through the join protocol
         self.live = list(range(args.world))
         self.gen = 0
+        #: control-log indices this process already acted on — a planned
+        #: change is applied AT MOST ONCE, so a crash shrink that undoes
+        #: a grow cannot make the next step re-apply the same grow (a
+        #: livelock: re-adopt the dead joiner, re-detect its death, ...)
+        self._applied_changes: set = set()
         self.pool = DSMPool(args.pool)
         self.control = ControlPlane(os.path.join(args.pool, "control"))
         self.board = ScalarReduceBoard(os.path.join(args.pool, "reduce"))
@@ -154,9 +178,15 @@ class ClusterWorker:
         self.source_used: Optional[str] = None
 
     def _proxy(self):
-        if not self._stage_to_sibling:
-            return None
+        if not self._stage_to_sibling or self.rank not in self.live:
+            return None       # a joiner has no ring sibling until adopted
         return self.staging.proxy(ring_sibling(self.rank, self.live))
+
+    def _point(self, point: str, step: int):
+        """Fire a protocol-phase fault point OUTSIDE the committer's
+        commit window (the join phases) — same hook, same semantics."""
+        if self.fault_hook is not None:
+            self.fault_hook(point, step)
 
     # -- state objects -------------------------------------------------------
     @property
@@ -268,8 +298,15 @@ class ClusterWorker:
                                          self.args.dim)
         if self.rank == adopter:
             view = self.staging.view(self.rank, victim_tpl)
-            vobjs, q, source = self.ctx.recover(
-                victim_tpl, peers=(view,), exact=False)
+            try:
+                vobjs, q, source = self.ctx.recover(
+                    victim_tpl, peers=(view,), exact=False)
+            except ColdStartError:
+                # the victim never durably committed under its OWN
+                # namespace (a joiner killed mid-join): its entries are
+                # still derivable from the newest manifest through that
+                # manifest's partition meta — the old owners' aggregates
+                vobjs, q, source = self._recover_via_manifest(victim)
             self.control.post_shrink_result(
                 gen_new, {"q": q, "source": source, "victim": victim,
                           "live": live_new})
@@ -330,23 +367,202 @@ class ClusterWorker:
         self._repartition(m, old_partition, old_live)
         return False
 
+    # -- grow protocol -------------------------------------------------------
+    def _planned_grow(self, joiner: int, at_step: int):
+        """Elastic scale-UP at a step boundary, old-rank side.  Three
+        phases, each ending in a ``JOIN_POINTS`` fault point:
+
+        1. **staged** — RStore every entry the new partition assigns to
+           the joiner into ITS staging buffer (``join/<t>``, tag q);
+        2. **committed** — flush my state at ``q = at_step - 1`` under
+           the OLD partition and elect ONE gen+1 manifest whose meta
+           names the joiner (the single completeOp the whole grow hangs
+           on: before it the grow never happened, after it the joiner's
+           state is derivable from the manifest alone);
+        3. **adopted** — switch to the grown live set and repartition
+           (``_repartition`` is direction-agnostic).
+
+        A joiner killed at any of these leaves the survivors blocked on
+        its all-reduce contribution at ``at_step``; the posted crash
+        shrink then takes them back to the old membership — the staged
+        copies are volatile and the manifest meta maps the joiner's
+        entries back to their old owners (``_recover_via_manifest``)."""
+        old_live, old_partition = list(self.live), dict(self.partition)
+        q = at_step - 1
+        gen_new = self.gen + 1
+        live_new = sorted(old_live + [joiner])
+        new_partition = partition_plan(self.names, live_new,
+                                       mesh_device_sets(live_new))
+        moves = join_moves(old_partition, new_partition, joiner)
+        buf = self.staging.proxy(joiner).staging
+        for t in sorted(moves):
+            if moves[t] == self.rank:
+                d = self.tensors[t]
+                buf[join_name(t)] = (q, {"p": d["p"], "mu": d["mu"],
+                                         "nu": d["nu"]})
+        self._point("join_staged", q)
+        self.gen = gen_new
+        self.proto.set_membership(gen_new, old_live)   # old ranks record
+        meta = self.proto.meta_for(
+            partition=old_partition, next_partition=new_partition,
+            join={"member": joiner, "at_step": at_step})
+        m = self._flush_and_record(q, meta=meta)
+        self._point("join_committed", q)
+        self.live = live_new
+        self.proto.set_membership(gen_new, live_new)
+        self._repartition(m, old_partition, old_live)
+        self._point("join_adopted", q)
+
+    def _join(self, at_step: int):
+        """Joiner side: observe the three phases and adopt.  The new
+        partition is a pure function of the grown live set, so the
+        joiner derives its own slice with no coordinator; its state
+        comes staging-first (the copies the old ranks RStored into THIS
+        rank's buffer, tag ``q``) with pool fallback through the join
+        manifest's old-partition meta."""
+        q = at_step - 1
+        old_live, old_partition = list(self.live), dict(self.partition)
+        live_new = sorted(old_live + [self.rank])
+        new_partition = partition_plan(self.names, live_new,
+                                       mesh_device_sets(live_new))
+        moves = join_moves(old_partition, new_partition, self.rank)
+        tpl = join_templates(moves, self.args.dim)
+        # phase 1 (observed): my staged partition is complete in my own
+        # buffer — or the join manifest already exists (stale staging is
+        # then irrelevant: the pool path below serves)
+        deadline = time.monotonic() + self.args.timeout
+        staged: Dict[str, Any] = {}
+        while True:
+            view = self.staging.view(self.rank, tpl)
+            staged = {n: t for n, (tag, t) in view.staging.items()
+                      if tag == q}
+            if set(staged) == set(tpl):
+                break
+            m = self.proto.find_manifest(q)
+            if m is not None and \
+                    m["meta"].get("join", {}).get("member") == self.rank:
+                staged = {}
+                break
+            if time.monotonic() > deadline:
+                raise TimeoutError(f"join staging for rank {self.rank} "
+                                   f"never completed")
+            time.sleep(POLL_S)
+        self._point("join_staged", q)
+        # phase 2 (observed): the ONE elected gen+1 manifest naming me
+        while True:
+            m = self.proto.find_manifest(q)
+            if m is not None and \
+                    m["meta"].get("join", {}).get("member") == self.rank:
+                break
+            if time.monotonic() > deadline:
+                raise TimeoutError(f"join manifest for rank {self.rank} "
+                                   f"never appeared")
+            time.sleep(POLL_S)
+        self._point("join_committed", q)
+        # phase 3: adopt the new membership and install my partition
+        self.gen = int(m["meta"]["gen"])
+        self.live = live_new
+        self.proto.set_membership(self.gen, live_new)
+        self.partition = new_partition
+        if set(staged) == set(tpl) and tpl:
+            mine = {t: {k: np.asarray(v)
+                        for k, v in staged[join_name(t)].items()}
+                    for t in moves}
+            source = "peer-staging"
+        else:
+            mine, source = self._read_via_partition_meta(
+                m, sorted(moves)), "pool"
+        mesh = rank_submesh(self.rank, self.live)
+        descs = {t: {k: ParamDesc(v.shape, (None,) * v.ndim)
+                     for k, v in d.items()} for t, d in mine.items()}
+        placed, _ = remesh(mine, descs, mesh)
+        self.tensors = {t: {k: np.asarray(v) for k, v in d.items()}
+                        for t, d in placed.items()}
+        if self.placement is not None:
+            self.committer.n_shards = None
+            if self.args.replicate:
+                from repro.dsm.emu import tree_nbytes
+                from repro.dsm.placement import plan_rank_staging
+                self._stage_to_sibling = plan_rank_staging(
+                    self.placement, tree_nbytes(self.state_objects()))
+        self.committer.replicate_to = self._proxy()
+        self.step_done = q
+        self.resumed_from = q
+        self.source_used = source
+        self._point("join_adopted", q)
+
+    def _recover_via_manifest(self, victim: int):
+        """Recover a victim that owns entries under the CURRENT partition
+        but never committed them under its own ``w<victim>/`` namespace —
+        a joiner killed at any join phase.  The newest manifest's
+        partition meta maps those entries back to the ranks that flushed
+        them, so recovery lands on the manifest step exactly as the pool
+        path would."""
+        ms = self.proto._manifests_desc()
+        assert ms, "no manifest to recover a joiner victim from"
+        m = ms[0]
+        need = sorted(t for t, r in self.partition.items() if r == victim)
+        full = self._read_via_partition_meta(m, need)
+        vobjs = {
+            rank_ns(victim, "params"): {t: full[t]["p"] for t in need},
+            rank_ns(victim, "opt"): {t: {"mu": full[t]["mu"],
+                                         "nu": full[t]["nu"]}
+                                     for t in need},
+        }
+        return vobjs, int(m["step"]), "pool"
+
+    def _read_via_partition_meta(self, m: dict, tensors: List[str]
+                                 ) -> Dict[str, Dict[str, np.ndarray]]:
+        """Read ``tensors`` out of manifest ``m`` through ITS partition
+        meta — the owners' ``w<r>/params`` / ``w<r>/opt`` aggregates as
+        of that manifest, whatever the partition is NOW."""
+        mpart = {t: int(r) for t, r in m["meta"]["partition"].items()}
+        out: Dict[str, Dict[str, np.ndarray]] = {}
+        owners = sorted({mpart[t] for t in tensors})
+        for r in owners:
+            tpl = partition_templates(r, mpart, self.args.dim)
+            pname, oname = rank_ns(r, "params"), rank_ns(r, "opt")
+            params = self.pool.read_entry(pname, m["objects"][pname],
+                                          tpl[pname])
+            opt = self.pool.read_entry(oname, m["objects"][oname],
+                                       tpl[oname])
+            for t in tensors:
+                if mpart[t] == r:
+                    out[t] = {"p": params[t], "mu": opt[t]["mu"],
+                              "nu": opt[t]["nu"]}
+        return out
+
     # -- main loop -----------------------------------------------------------
     def run(self) -> dict:
-        # initial durable floor (step -1): even a kill inside the FIRST
-        # commit window leaves a recoverable cluster manifest.  Doubles as
-        # the start barrier — every rank waits for it.
-        self.ctx.put(self.state_objects(), step=-1)
-        with self.ctx.commit(-1, meta=self._meta()):
-            pass
-        self.proto.wait_manifest(-1, control=self.control)
+        if getattr(self.args, "joiner", False):
+            # a joiner enters through the join protocol, not the floor
+            # barrier: it adopts at join_at - 1 and steps from join_at
+            self._join(self.args.join_at)
+            k = self.args.join_at
+        else:
+            # initial durable floor (step -1): even a kill inside the
+            # FIRST commit window leaves a recoverable cluster manifest.
+            # Doubles as the start barrier — every rank waits for it.
+            self.ctx.put(self.state_objects(), step=-1)
+            with self.ctx.commit(-1, meta=self._meta()):
+                pass
+            self.proto.wait_manifest(-1, control=self.control)
+            k = 0
 
-        k = 0
         while k < self.args.steps:
-            ctl = self.control.read()
-            if (ctl and ctl.get("planned") and ctl["at_step"] == k
-                    and ctl["victim"] in self.live):
-                if self._planned_shrink(ctl["victim"], k):
-                    return {"rank": self.rank, "planned_exit_at": k}
+            for ch in self.control.changes():
+                if (ch["idx"] in self._applied_changes
+                        or not ch.get("planned")
+                        or ch.get("at_step") != k):
+                    continue
+                self._applied_changes.add(ch["idx"])
+                if ch["kind"] == "shrink" and ch["member"] in self.live:
+                    if self._planned_shrink(ch["member"], k):
+                        return {"rank": self.rank, "planned_exit_at": k}
+                elif (ch["kind"] == "grow"
+                        and ch["member"] not in self.live
+                        and ch["member"] != self.rank):
+                    self._planned_grow(ch["member"], k)
             self.board.contribute(self.gen, k, self.rank, self._partial(k))
             try:
                 total = self.board.combine(self.gen, k, self.live,
@@ -406,8 +622,16 @@ def main(argv=None) -> int:
                          "when set, the placement policy decides ring "
                          "staging and shard count from the partition "
                          "bytes (--replicate 0 still forces pool-only)")
+    ap.add_argument("--joiner", action="store_true",
+                    help="this rank GROWS the cluster: it is outside "
+                         "--world, runs the join protocol at --join-at "
+                         "and steps from there (rank must not be in "
+                         "range(world))")
+    ap.add_argument("--join-at", type=int, default=0,
+                    help="step the planned grow is posted for (the "
+                         "joiner adopts state at join_at - 1)")
     ap.add_argument("--kill-point", default="none",
-                    choices=("none",) + KILL_POINTS)
+                    choices=("none",) + KILL_POINTS + JOIN_POINTS)
     ap.add_argument("--kill-step", type=int, default=3)
     args = ap.parse_args(argv)
 

@@ -1,7 +1,12 @@
 """Adversarial crash fuzzer: seeded episodes of kills + torn writes +
-stragglers against train / serve / cluster workloads, checked against ONE
-invariant — *recovery always lands on a completed commit, bit-identical
-to a clean run replayed to that step*.
+stragglers against train / serve / cluster / scale workloads, checked
+against ONE invariant — *recovery always lands on a completed commit,
+bit-identical to a clean run replayed to that step*.
+
+The ``scale`` workload is the cluster workload plus one planned
+grow-by-repartition (``repro.scale.grow``): a joiner rank enters the
+live generation mid-run, and kills can land at any of the three join
+windows (``JOIN_POINTS``) on any rank — joiner included.
 
 Where the kill-point suites enumerate ~6 hand-picked cells at 3 fixed
 commit-window points, an episode here draws a whole ``FaultSchedule``
@@ -48,15 +53,17 @@ from repro.dsm.api import open_cxl0
 from repro.dsm.cluster import rank_ns, ring_sibling
 from repro.dsm.emu import PRESETS, TopologyEmulator, attach_emulator
 from repro.dsm.faults import (FaultInjector, FaultSchedule, FaultyPool,
-                              InjectedCrash, KillSpec, StragglerSpec,
-                              TornSpec, attach_faults, PRIMITIVES)
+                              InjectedCrash, JOIN_POINTS, KillSpec,
+                              StragglerSpec, TornSpec, attach_faults,
+                              PRIMITIVES)
 from repro.dsm.flit_runtime import COMMIT_MODES, KILL_POINTS
 from repro.dsm.recovery import ColdStartError, RecoveryManager
+from repro.scale.grow import join_moves
 from repro.train.elastic import partition_plan
 
 import zlib
 
-WORKLOADS = ("train", "serve", "cluster")
+WORKLOADS = ("train", "serve", "cluster", "scale")
 TOPOLOGIES = tuple(PRESETS)
 
 #: setting this env var swaps recovered objects for a STALE commit's
@@ -87,6 +94,7 @@ class EpisodeConfig:
     requests: int = 5               # serve sessions
     arrival_every: int = 2          # serve ticks between arrivals
     decode_len: int = 4             # serve decode ticks per session
+    grow_at: int = 0                # scale: step at which rank `world` joins
     emu_seed: int = 0
 
     @property
@@ -761,7 +769,185 @@ def _run_cluster(cfg: EpisodeConfig, sched: FaultSchedule,
     return ev
 
 
-_ENGINES = {"train": _run_train, "serve": _run_serve, "cluster": _run_cluster}
+def _scale_join(cfg, pool, ctxs, injs, live, open_rank, s):
+    """The three-phase grow-by-repartition (see ``repro.scale.grow``) in
+    fuzz form — stage, commit, adopt — with a JOIN_POINTS window at every
+    phase boundary.  Mutates ``live``/``ctxs`` in place; the caller's
+    crash handling covers every interleaving: before the adoption commit
+    the joiner owns nothing (a death anywhere just abandons the grow),
+    after it the joiner is ordinary membership."""
+    names = _cluster_names(cfg)
+    joiner = cfg.world
+    q = s - 1
+    old_plan = partition_plan(names, sorted(live))
+    new_plan = partition_plan(names, sorted(live) + [joiner])
+    moves = join_moves(old_plan, new_plan, joiner)
+    vals_q = _cluster_values_at(cfg, q)
+    ctxs[joiner] = open_rank(joiner)
+    # staged: each old rank RStores the entries the new partition re-homes
+    # to the joiner into the joiner's volatile staging buffer at tag q
+    for r in sorted(live):
+        for n in sorted(k for k, src in moves.items() if src == r):
+            ctxs[r].tiers.rstore(rank_ns(r, n), ctxs[joiner].tiers, tag=q)
+        injs[r].window("join_staged", q)
+    injs[joiner].window("join_staged", q)
+    # committed: the OLD membership elects one more manifest at q — until
+    # this lands, the grow simply never happened
+    _cluster_commit(cfg, pool, ctxs, injs, live, old_plan, vals_q, q)
+    for r in sorted(live):
+        injs[r].window("join_committed", q)
+    injs[joiner].window("join_committed", q)
+    # adopted: the joiner installs its partition and the NEW membership
+    # elects its re-meshed base manifest at q
+    live.append(joiner)
+    live.sort()
+    for n in sorted(moves):
+        ctxs[joiner].tiers.lstore(rank_ns(joiner, n), vals_q[n])
+    _cluster_commit(cfg, pool, ctxs, injs, live, new_plan, vals_q, q)
+    for r in sorted(live):
+        injs[r].window("join_adopted", q)
+
+
+def _run_scale(cfg: EpisodeConfig, sched: FaultSchedule,
+               pool_dir: str) -> _Events:
+    """The cluster workload plus ONE planned grow at ``cfg.grow_at``: rank
+    ``world`` joins the live generation mid-run through the three-phase
+    protocol.  The invariant is unchanged — the clean trajectory is
+    membership-independent (``_cluster_values_at``), so recovery from a
+    kill at ANY join window must land on a completed commit bit-identical
+    to the clean replay, under whichever membership that commit carries
+    (pre-manifest: the grow never happened; post-manifest: the joiner's
+    partition is derivable from the pool alone)."""
+    ev = _Events()
+    names = _cluster_names(cfg)
+    pool = FaultyPool(pool_dir, torn=sched.torn)
+    joiner = cfg.world
+    injs = {r: FaultInjector(sched, worker=r)
+            for r in range(cfg.world + 1)}
+    live = sorted(range(cfg.world))
+    ctxs: Dict[int, Any] = {}
+
+    def open_rank(r):
+        ctx = open_cxl0(pool, worker_id=r, schedule="sync",
+                        fault_hook=injs[r].window)
+        attach_emulator(ctx.tiers, TopologyEmulator(
+            cfg.topology, seed=cfg.emu_seed + r,
+            fault_model=sched.straggler))
+        return attach_faults(ctx, injs[r], wrap_pool=False)
+
+    for r in live:
+        ctxs[r] = open_rank(r)
+    s = 0
+    grown = False
+    pending_commit: Optional[int] = -1      # the initial / re-mesh commit
+    for _ in range(MAX_INCARNATIONS):
+        try:
+            if pending_commit is not None:
+                _cluster_commit(cfg, pool, ctxs, injs, live,
+                                partition_plan(names, live),
+                                _cluster_values_at(cfg, pending_commit),
+                                pending_commit)
+                pending_commit = None
+            while s < cfg.steps:
+                if not grown and s == cfg.grow_at:
+                    grown = True        # at-most-once, like the live protocol
+                    _scale_join(cfg, pool, ctxs, injs, live, open_rank, s)
+                plan = partition_plan(names, live)
+                vals = _cluster_values_at(cfg, s)
+                for r in sorted(live):
+                    sib = (ring_sibling(r, live)
+                           if cfg.replicate and len(live) > 1 else None)
+                    for n in sorted(k for k in names if plan[k] == r):
+                        nsname = rank_ns(r, n)
+                        ctxs[r].tiers.lstore(nsname, vals[n])
+                        if sib is not None:
+                            ctxs[r].tiers.rstore(nsname, ctxs[sib].tiers,
+                                                 tag=s)
+                if (s + 1) % cfg.commit_every == 0 or s == cfg.steps - 1:
+                    _cluster_commit(cfg, pool, ctxs, injs, live, plan,
+                                    vals, s)
+                s += 1
+            break
+        except InjectedCrash as e:
+            ev.kills.append({"worker": e.worker, "op": e.op,
+                             "index": e.index, "phase": e.phase})
+            victim = e.worker
+            # a joiner that never adopted owns nothing: drop it and
+            # abandon the half-done grow, whoever the victim was
+            if joiner in ctxs and joiner not in live:
+                ctxs[joiner].crash()
+                ctxs[joiner].close()
+                ctxs.pop(joiner)
+                if victim == joiner:
+                    continue
+            old_plan = partition_plan(names, live)
+            live.remove(victim)
+            ctxs[victim].crash()
+            ctxs[victim].close()
+            ctxs.pop(victim)
+            if not live:
+                ev.violations.append("every worker dead — episode undefined")
+                break
+            roll = _cluster_recover(cfg, pool, ctxs, ev, live, old_plan,
+                                    victim)
+            if roll is None:
+                for r in live:
+                    ctxs[r].crash()
+                    ctxs[r].close()
+                    ctxs[r] = open_rank(r)
+                s, pending_commit = 0, -1
+                ev.cold += 1
+            else:
+                s, pending_commit = roll + 1, roll
+    else:
+        ev.violations.append("episode did not converge (livelock guard)")
+    # the forced last word: wipe EVERY survivor (staging included) — the
+    # final membership's full state must come back from the pool alone
+    for r in sorted(live):
+        ctxs[r].crash()
+        ctxs[r].close()
+        ctxs[r] = open_rank(r)
+    if live:
+        plan = partition_plan(names, live)
+        templates = {rank_ns(plan[n], n): np.zeros((cfg.dim,), np.float32)
+                     for n in names}
+        expected = _oracle_pool_step(pool, set(templates), exact=False)
+        got = _recover_seam(RecoveryManager(pool), pool, templates,
+                            exact=False)
+        if expected is None:
+            if got is not None:
+                ev.violations.append(
+                    f"final recovery: recovered step {got[1]} but every "
+                    "completed commit references torn payloads")
+        elif got is None:
+            ev.violations.append(
+                f"final recovery: cold start despite a completed commit at "
+                f"step {expected}")
+        else:
+            objs, step, _source = got
+            ev.recoveries.append({"step": step, "source": _source,
+                                  "expected": expected, "final": True})
+            if step != expected:
+                ev.violations.append(
+                    f"final recovery landed on step {step}; newest completed "
+                    f"un-torn commit is step {expected}")
+            else:
+                want = _cluster_values_at(cfg, expected)
+                for n in names:
+                    if _arr_crc(objs[rank_ns(plan[n], n)]) != \
+                            _arr_crc(want[n]):
+                        ev.violations.append(
+                            f"final recovery: {n}@{expected} is not "
+                            "bit-identical to the clean run")
+                        break
+    for r in sorted(live):
+        ctxs[r].close()
+    ev.torn = len(pool.injected)
+    return ev
+
+
+_ENGINES = {"train": _run_train, "serve": _run_serve,
+            "cluster": _run_cluster, "scale": _run_scale}
 
 
 def run_episode(cfg: EpisodeConfig, sched: FaultSchedule,
@@ -805,9 +991,11 @@ def _op_estimate(cfg: EpisodeConfig) -> Dict[str, int]:
         commits = cfg.serve_ticks // cfg.commit_every + 2
         est = {"lstore": cfg.serve_ticks * active, "rstore": 2, "mstore": 2,
                "rflush": commits * active, "completeOp": commits}
-    else:
+    else:                                   # cluster / scale
         per_rank = max(1, cfg.n_tensors // cfg.world)
         commits = cfg.steps // cfg.commit_every + 2
+        if cfg.workload == "scale":
+            commits += 2                    # the join's two extra elections
         est = {"lstore": (cfg.steps + commits) * per_rank,
                "rstore": cfg.steps * per_rank if cfg.replicate else 2,
                "mstore": 2, "rflush": commits * per_rank,
@@ -822,24 +1010,36 @@ def make_episode(seed_path: Sequence[int], workload: str, topology: str
     function of the seed path (``np.random.default_rng`` sequence seed)."""
     rng = np.random.default_rng(list(seed_path))
     cfg = EpisodeConfig(workload=workload, topology=topology)
-    if workload == "cluster":
+    if workload in ("cluster", "scale"):
         cfg.mode = "sync"
         cfg.steps, cfg.commit_every, cfg.n_tensors = 8, 2, 4
         cfg.replicate = bool(rng.integers(0, 2))
+        if workload == "scale":
+            cfg.grow_at = int(rng.integers(1, cfg.steps - 1))
     else:
         cfg.mode = str(rng.choice(COMMIT_MODES))
     cfg.emu_seed = int(rng.integers(0, 2 ** 31 - 1))
     est = _op_estimate(cfg)
     n_kills = int(rng.choice([0, 1, 1, 1, 1, 2]
-                             if workload != "cluster" else [0, 1, 1, 1, 1]))
+                             if workload in ("train", "serve")
+                             else [0, 1, 1, 1, 1]))
     kills = []
     for _ in range(n_kills):
-        worker = int(rng.integers(0, cfg.world)) if workload == "cluster" \
-            else 0
+        if workload == "cluster":
+            worker = int(rng.integers(0, cfg.world))
+        elif workload == "scale":       # the joiner (rank `world`) included
+            worker = int(rng.integers(0, cfg.world + 1))
+        else:
+            worker = 0
         if rng.random() < 0.25:
-            kills.append(KillSpec(
-                worker=worker, point=str(rng.choice(KILL_POINTS)),
-                at_step=int(rng.integers(0, cfg.steps))))
+            points = (KILL_POINTS + JOIN_POINTS if workload == "scale"
+                      else KILL_POINTS)
+            point = str(rng.choice(points))
+            # join windows only ever fire at the pre-join step q — pin the
+            # kill there so a drawn join point is never vacuous
+            at = (cfg.grow_at - 1 if point in JOIN_POINTS
+                  else int(rng.integers(0, cfg.steps)))
+            kills.append(KillSpec(worker=worker, point=point, at_step=at))
         else:
             op = str(rng.choice(("any",) + PRIMITIVES))
             kills.append(KillSpec(

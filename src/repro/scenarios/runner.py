@@ -31,6 +31,13 @@ RStore-staged copy when newer than the pool, else the newest cluster
 manifest) and finish bit-identically to a planned shrink at the same
 step.
 
+One SCALE suite (``repro.scenarios.scale``) grows a live 3-rank cluster
+by a joining rank (killing the joiner at each join-phase boundary in the
+kill cells — recovery must fall back to the old membership
+bit-identically), drains a fleet engine under load, and checks the
+cost-priced autoscaler beats every fixed fleet size under the bursty
+trace (decision log written to the workdir).
+
 ``run_suite`` / ``run_serve_suite`` / ``run_cluster_suite`` run all the
 kill points; the CLI prints one line per scenario:
 
@@ -464,7 +471,8 @@ def main(argv=None) -> int:
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--suite", default="train",
-                    choices=["train", "serve", "cluster", "fuzz", "all"])
+                    choices=["train", "serve", "cluster", "scale", "fuzz",
+                             "all"])
     ap.add_argument("--workdir", default=None)
     ap.add_argument("--steps", type=int, default=8)
     ap.add_argument("--commit-every", type=int, default=2)
@@ -506,6 +514,11 @@ def main(argv=None) -> int:
                     help="cluster suite: recovery sources to exercise "
                          "(peer = sibling staging newer than the pool, "
                          "pool = replication off)")
+    ap.add_argument("--scale-points", default="none,join_staged,"
+                    "join_committed,join_adopted",
+                    help="scale suite: grow cells to run ('none' = the "
+                         "no-kill grow; join_* kill the joiner at that "
+                         "phase boundary)")
     ap.add_argument("--episodes", type=int, default=10,
                     help="fuzz suite: episodes per (workload, topology)")
     ap.add_argument("--seed", type=int, default=0,
@@ -599,6 +612,37 @@ def main(argv=None) -> int:
                   f"digest_match={r.digests == r.reference_digests}"
                   + (f",detail={r.detail}" if r.detail else ""))
 
+    def _scale_suite():
+        nonlocal failed
+        from repro.scenarios.scale import (run_autoscale_cell,
+                                           run_fleet_scale_cell,
+                                           run_grow_suite)
+        points = [p for p in args.scale_points.split(",") if p]
+        for r in run_grow_suite(workdir, points=points):
+            status = "OK" if r.ok else "FAIL"
+            failed += not r.ok
+            print(f"grow_scenario,{r.kill_point},{status},"
+                  f"lives={sorted(set(r.lives))},"
+                  f"sources={sorted(set(map(str, r.sources)))},"
+                  f"digest_match={r.digests == r.reference_digests}"
+                  + (f",detail={r.detail}" if r.detail else ""))
+        fr = run_fleet_scale_cell(workdir)
+        failed += not fr.ok
+        print(f"fleet_scale,{'OK' if fr.ok else 'FAIL'},"
+              f"grew={fr.grew},drained={fr.drained},"
+              f"migrations={fr.migrations},"
+              f"outputs_bit_identical={fr.outputs_match}"
+              + (f",detail={fr.detail}" if fr.detail else ""))
+        ar = run_autoscale_cell(workdir)
+        failed += not ar.ok
+        print(f"autoscale,{'OK' if ar.ok else 'FAIL'},"
+              f"auto_cost={ar.auto_cost_ns:.3g},"
+              f"best_fixed(n={ar.best_fixed_n})={ar.best_fixed_cost_ns:.3g},"
+              f"p99={ar.auto_p99}vs{ar.best_fixed_p99},"
+              f"lost={ar.lost_sessions},decisions={ar.decisions},"
+              f"grows={ar.grows},shrinks={ar.shrinks},"
+              f"log={ar.decision_log}")
+
     def _fuzz_suite():
         nonlocal failed
         from repro.dsm.emu import PRESETS
@@ -630,6 +674,8 @@ def main(argv=None) -> int:
         _suite_guard("serve", _serve_suite)
     if args.suite in ("cluster", "all"):
         _suite_guard("cluster", _cluster_suite)
+    if args.suite in ("scale", "all"):
+        _suite_guard("scale", _scale_suite)
     if args.suite in ("fuzz", "all"):
         _suite_guard("fuzz", _fuzz_suite)
     print(f"runner,{'FAIL' if failed else 'OK'},failed={failed}")

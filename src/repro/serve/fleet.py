@@ -112,24 +112,65 @@ class FleetController:
         # between engines without alloc/free traffic
         frames = n_slots * (-(-t_max // block_tokens) + 1) + 8
         allocator = BlockAllocator(max(64, 4 * frames * n_engines))
+        # everything a later add_engine() must replay to build an
+        # identical serving front (bundle/params/allocator attach below)
+        self._arch = arch
+        self._build_kwargs = dict(
+            smoke=smoke, n_slots=n_slots, t_max=t_max,
+            pool_path=pool_path, commit_every=commit_every,
+            commit_mode=commit_mode, topology=topology, seed=seed,
+            restore_mode=restore_mode, retire_done=retire_done,
+            fault_hook=fault_hook, paged=True,
+            block_tokens=block_tokens, prefix_reuse=prefix_reuse)
+        self._bundle, self._params = bundle, params
         self.engines: Dict[int, ServeEngine] = {}
-        for i in range(1, n_engines + 1):
-            # engines share ONE weight pytree (bundle/params built once):
-            # N serving fronts of the same model in one host
-            eng, cfg = build_serve_engine(
-                arch, smoke=smoke, n_slots=n_slots, t_max=t_max,
-                pool_path=pool_path, commit_every=commit_every,
-                commit_mode=commit_mode, topology=topology, seed=seed,
-                restore_mode=restore_mode, retire_done=retire_done,
-                fault_hook=fault_hook, engine_id=i, paged=True,
-                block_tokens=block_tokens, allocator=allocator,
-                prefix_reuse=prefix_reuse, bundle=bundle, params=params)
-            self.engines[i] = eng
-            bundle, params = eng.bundle, eng.params
-        self.cfg = cfg
         self.allocator = allocator
+        for _ in range(n_engines):
+            self.add_engine()
         self.n_migrations = 0
         self.migration_log: List[tuple] = []
+        #: finished work of engines that have since been drained away —
+        #: results outlive the engine that produced them
+        self._retired: Dict[int, ServeResult] = {}
+
+    # -- elastic membership --------------------------------------------------
+    def add_engine(self) -> int:
+        """Grow the fleet by one serving front (next free 1-based id —
+        ids are never reused, so a re-added engine can't alias a closed
+        one's pool namespace).  The new engine shares the fleet's weight
+        pytree and frame allocator; it serves admissions from its first
+        tick.  Returns the new engine id."""
+        eid = max(self.engines, default=0) + 1
+        eng, cfg = build_serve_engine(
+            self._arch, engine_id=eid, allocator=self.allocator,
+            bundle=self._bundle, params=self._params,
+            **self._build_kwargs)
+        self.engines[eid] = eng
+        self._bundle, self._params = eng.bundle, eng.params
+        self.cfg = cfg
+        return eid
+
+    def remove_engine(self, eid: int):
+        """Shrink the fleet by draining one engine: every RUNNING session
+        live-migrates (token-lossless, the four-phase protocol) to the
+        least-loaded peer, every PENDING request re-routes through
+        cost-priced admission, then the engine closes.  Its pool
+        namespace stays durable — history is never rewritten."""
+        assert len(self.engines) > 1, "cannot remove the last engine"
+        e = self.engines[eid]
+        for rid in [r for r in e.sched.admission_order
+                    if r in e.sched.running]:
+            depths = {i: d for i, d in self.queue_depths().items()
+                      if i != eid}
+            dst = min(sorted(depths), key=lambda i: depths[i])
+            self.migrate(rid, eid, dst)
+        pending = list(e.sched.pending)
+        e.sched.pending.clear()
+        del self.engines[eid]
+        if pending:
+            self.submit(pending)
+        self._retired[eid] = e.finish()
+        e.close()
 
     # -- routing -------------------------------------------------------------
     def queue_depths(self) -> Dict[int, int]:
@@ -184,8 +225,9 @@ class FleetController:
 
     def finish(self, ticks0: Optional[Dict[int, int]] = None) -> FleetResult:
         ticks0 = ticks0 or {}
-        per = {i: e.finish(ticks0.get(i, 0))
-               for i, e in self.engines.items()}
+        per = dict(self._retired)
+        per.update({i: e.finish(ticks0.get(i, 0))
+                    for i, e in self.engines.items()})
         outputs: Dict[str, List[int]] = {}
         for r in per.values():
             outputs.update(r.outputs)

@@ -27,14 +27,21 @@ from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 @dataclasses.dataclass(frozen=True)
 class Request:
-    """One serving request: a prompt and a decode budget."""
+    """One serving request: a prompt and a decode budget.
+
+    ``arrival`` is the tick the request enters the system (0 = present
+    from the start, the pre-arrival-time behaviour).  Only arrival-aware
+    drivers (scale.traffic / scale.autoscaler) read it; the scheduler
+    itself stays arrival-blind — whoever submits decides *when*."""
     rid: str
     prompt: Tuple[int, ...]              # prompt token ids
     max_new_tokens: int
+    arrival: int = 0
 
     def __post_init__(self):
         assert len(self.prompt) > 0, "empty prompt"
         assert self.max_new_tokens >= 1, self.max_new_tokens
+        assert self.arrival >= 0, self.arrival
 
 
 class SlotScheduler:

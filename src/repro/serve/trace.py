@@ -20,6 +20,7 @@ def synthetic_trace(n_requests: int, *, seed: int = 0,
                     prompt_lens: Sequence[int] = (32,),
                     new_tokens: Sequence[int] = (4, 8, 16, 32, 48),
                     n_prompts: int = 0,
+                    arrivals: Optional[Sequence[int]] = None,
                     ) -> List[Request]:
     """``n_requests`` deterministic requests.
 
@@ -32,7 +33,13 @@ def synthetic_trace(n_requests: int, *, seed: int = 0,
     ``n_prompts > 0`` draws only that many DISTINCT prompts (per prompt
     length) and cycles them — the shared-prefix serving workload where
     content-addressed prefix reuse (serve.paging) pays: request i and
-    request i + n_prompts*len(prompt_lens) share their prompt exactly."""
+    request i + n_prompts*len(prompt_lens) share their prompt exactly.
+
+    ``arrivals`` stamps request i with arrival tick ``arrivals[i]``
+    (cycled if shorter).  Omitted, every request arrives at tick 0 and
+    the trace is byte-identical to the pre-arrival-time one: prompts
+    come from the same RNG draws in the same order, and ``arrival=0``
+    is the dataclass default."""
     rng = np.random.default_rng(seed)
     pool: dict = {}
     out: List[Request] = []
@@ -48,8 +55,13 @@ def synthetic_trace(n_requests: int, *, seed: int = 0,
         else:
             prompt = tuple(int(t)
                            for t in rng.integers(0, vocab_size, size=L))
-        out.append(Request(rid=f"r{i:04d}", prompt=prompt,
-                           max_new_tokens=m))
+        if arrivals is None:
+            out.append(Request(rid=f"r{i:04d}", prompt=prompt,
+                               max_new_tokens=m))
+        else:
+            out.append(Request(rid=f"r{i:04d}", prompt=prompt,
+                               max_new_tokens=m,
+                               arrival=int(arrivals[i % len(arrivals)])))
     return out
 
 

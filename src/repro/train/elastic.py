@@ -55,6 +55,29 @@ def shrink_plan(old_ranks: int, new_ranks: int) -> dict:
     return {r: r % new_ranks for r in range(old_ranks)}
 
 
+def grow_plan(old_ranks: int, new_ranks: int) -> dict:
+    """``shrink_plan``'s inverse direction: which new rank inherits each
+    old rank's data-shard responsibilities when the cluster GROWS.  Old
+    ranks keep their identity (r -> r); the added ranks start fresh —
+    the deterministic pipeline means a joiner can compute any shard, so
+    the plan only documents continuity for the launcher."""
+    assert new_ranks >= old_ranks > 0, (old_ranks, new_ranks)
+    return {r: r for r in range(old_ranks)}
+
+
+def plan_delta(old_plan: Dict[str, int], new_plan: Dict[str, int]
+               ) -> Dict[str, Tuple[int, int]]:
+    """The entries that change owner between two partition plans:
+    ``{name: (old_owner, new_owner)}``.  This is exactly the transfer
+    set of a grow (or shrink) by repartition — the survivors RStore each
+    moving entry into its new owner's staging buffer, and everything not
+    in the delta stays put."""
+    assert set(old_plan) == set(new_plan), \
+        (sorted(set(old_plan) ^ set(new_plan)))
+    return {n: (old_plan[n], new_plan[n]) for n in sorted(old_plan)
+            if old_plan[n] != new_plan[n]}
+
+
 def partition_plan(names: Sequence[str], ranks: Sequence[int],
                    device_sets: Optional[Dict[int, Any]] = None
                    ) -> Dict[str, int]:
